@@ -1,0 +1,253 @@
+"""Benchmark harness — one function per paper figure/table + system
+throughput benches. Prints ``name,us_per_call,derived`` CSV rows
+(us_per_call = wall time of the measured callable; derived = the
+figure-level quantity the paper plots).
+
+  fig1  §5.1  messages at busiest node, m=1000 s=20     (closed forms)
+  fig2  §5.1  HT leader vs disseminator messages
+  fig3  §5.1  fault-tolerant-variant messages
+  fig4/5 §5.2 bandwidth @ 1 KiB requests
+  fig6  §5.2  bandwidth @ 512 B requests
+  fig7  §5.2  FT-variant bandwidth
+  delays §5.3/5.4 measured best-case message delays (executable sims)
+  sim_throughput  measured DES busiest-node load, HT vs S-Paxos
+  engine  vectorized JAX ordering engine ids/s (jit, CPU here)
+  kernels interpret-mode kernel sanity timings
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import analytical as A
+
+
+def _t(fn, n=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# -- closed-form figures -------------------------------------------------------
+
+def bench_fig1() -> None:
+    m, s = 1000, 20
+    for n in (10_000, 50_000, 100_000, 500_000):
+        rows = {}
+        us = _t(lambda: rows.update(
+            ht_leader=A.paper_ht_leader(n, m, s)["total"],
+            ht_diss=A.paper_ht_disseminator(n, m, s)["total"],
+            spaxos=A.paper_spaxos_leader(n, m)["total"],
+            ring=A.paper_ring_leader(n, m)["total"],
+            classical=A.paper_classical_leader(n, m)["total"]))
+        for k, v in rows.items():
+            emit(f"fig1/{k}/n={n}", us, f"{v:.0f}")
+
+
+def bench_fig2() -> None:
+    m, s = 1000, 20
+    for n in (10_000, 100_000, 500_000):
+        l = A.paper_ht_leader(n, m, s)["total"]
+        d = A.paper_ht_disseminator(n, m, s)["total"]
+        emit(f"fig2/leader/n={n}", 0.1, f"{l:.0f}")
+        emit(f"fig2/disseminator/n={n}", 0.1, f"{d:.0f}")
+        emit(f"fig2/ratio/n={n}", 0.1, f"{d / l:.1f}")
+
+
+def bench_fig3() -> None:
+    m = 1000
+    for n in (10_000, 100_000, 500_000):
+        ft = A.paper_ht_ft_leader_site(n, m, m)["total"]
+        sp = A.paper_spaxos_leader(n, m)["total"]
+        emit(f"fig3/ht_ft_leader_site/n={n}", 0.1, f"{ft:.0f}")
+        emit(f"fig3/spaxos_leader/n={n}", 0.1, f"{sp:.0f}")
+
+
+def bench_fig45() -> None:
+    m, s, q = 1000, 20, 1024
+    for n in (10_000, 100_000, 500_000):
+        emit(f"fig4/ht_leader_bytes/n={n}", 0.1,
+             f"{A.bytes_ht_leader(n, m, s, q)['total']:.3e}")
+        emit(f"fig4/ht_diss_bytes/n={n}", 0.1,
+             f"{A.bytes_ht_disseminator(n, m, s, q)['total']:.3e}")
+        emit(f"fig5/spaxos_leader_bytes/n={n}", 0.1,
+             f"{A.bytes_spaxos_leader(n, m, q)['total']:.3e}")
+        emit(f"fig5/ring_leader_bytes/n={n}", 0.1,
+             f"{A.bytes_ring_leader(n, m, q)['total']:.3e}")
+        emit(f"fig4/classical_leader_bytes/n={n}", 0.1,
+             f"{A.bytes_classical_leader(n, m, q)['total']:.3e}")
+
+
+def bench_fig6() -> None:
+    m, s, q = 1000, 20, 512
+    for n in (100_000, 500_000):
+        ht = A.bytes_ht_disseminator(n, m, s, q)["total"]
+        sp = A.bytes_spaxos_leader(n, m, q)["total"]
+        emit(f"fig6/ht_diss_bytes/n={n}", 0.1, f"{ht:.3e}")
+        emit(f"fig6/spaxos_leader_bytes/n={n}", 0.1, f"{sp:.3e}")
+        emit(f"fig6/gap_ratio/n={n}", 0.1, f"{sp / ht:.2f}")
+
+
+def bench_fig7() -> None:
+    m, q = 1000, 512
+    for n in (100_000, 500_000):
+        ft = A.bytes_ht_ft_leader_site(n, m, q)["total"]
+        sp = A.bytes_spaxos_leader(n, m, q)["total"]
+        emit(f"fig7/ht_ft_site_bytes/n={n}", 0.1, f"{ft:.3e}")
+        emit(f"fig7/spaxos_leader_bytes/n={n}", 0.1, f"{sp:.3e}")
+
+
+# -- executable-system measurements ---------------------------------------------
+
+def bench_delays() -> None:
+    from repro.core.htpaxos import HTConfig, HTPaxosSim
+    from repro.core.ring import RingConfig, RingPaxosSim
+    from repro.core.spaxos import SPaxosConfig, SPaxosSim
+    from repro.core.classical_smr import ClassicalConfig, ClassicalSim
+
+    def ht():
+        cfg = HTConfig(n_diss=5, n_seq=3, n_learners=0, n_clients=1,
+                       batch_size=1)
+        sim = HTPaxosSim(cfg, requests_per_client=1)
+        sim.run(until=100)
+        c = sim.clients[0]
+        (rid, t), = c.replied.items()
+        return t - c.pending[rid]
+    us = _t(lambda: ht())
+    emit("delays/ht_response", us, f"{ht():.0f} (paper: 4)")
+
+    def ring(m):
+        sim = RingPaxosSim(RingConfig(n_acceptors=m, n_learners=0,
+                                      n_clients=1, batch_size=1),
+                           requests_per_client=1)
+        sim.run(until=200)
+        c = sim.clients[0]
+        (rid, t), = c.replied.items()
+        return t - c.pending[rid]
+    for m in (3, 5, 8):
+        emit(f"delays/ring_response/m={m}", _t(lambda m=m: ring(m)),
+             f"{ring(m):.0f} (paper: m+2={m + 2})")
+
+    def spx():
+        sim = SPaxosSim(SPaxosConfig(n_replicas=5, n_clients=1,
+                                     batch_size=1), requests_per_client=1)
+        sim.run(until=100)
+        c = sim.clients[0]
+        (rid, t), = c.replied.items()
+        return t - c.pending[rid]
+    emit("delays/spaxos_response", _t(spx), f"{spx():.0f} (paper: 6)")
+
+    def cls():
+        sim = ClassicalSim(ClassicalConfig(n_acceptors=5, n_clients=1,
+                                           batch_size=1),
+                           requests_per_client=1)
+        sim.run(until=100)
+        c = sim.clients[0]
+        (rid, t), = c.replied.items()
+        return t - c.pending[rid]
+    emit("delays/classical_response", _t(cls), f"{cls():.0f} (paper: 4)")
+
+
+def bench_sim_throughput() -> None:
+    """Busiest-node message load measured on the executable systems at
+    equal client load (m=10 nodes, 40 requests)."""
+    from repro.core.htpaxos import HTConfig, HTPaxosSim
+    from repro.core.spaxos import SPaxosConfig, SPaxosSim
+    m, k = 10, 4
+
+    def ht():
+        cfg = HTConfig(n_diss=m, n_seq=3, n_learners=0, n_clients=m * k,
+                       batch_size=k, d1_client_retry=1e7,
+                       d2_id_rebroadcast=1e7, d3_reply_retry=1e7)
+        cfg.ordering.heartbeat_interval = 1e7
+        sim = HTPaxosSim(cfg, requests_per_client=1)
+        sim.run(until=400)
+        busiest = max(sim.node_total_msgs(n)
+                      for n in sim.diss_ids + sim.seq_ids)
+        return busiest, sim.node_total_msgs("s0")
+
+    def spx():
+        cfg = SPaxosConfig(n_replicas=m, n_clients=m * k, batch_size=k)
+        cfg.ordering.heartbeat_interval = 1e7
+        sim = SPaxosSim(cfg, requests_per_client=1)
+        sim.run(until=400)
+        return max((sim.lan1._stats(r).total_msgs()
+                    + sim.lan2._stats(r).total_msgs())
+                   for r in sim.replica_ids)
+
+    us = _t(lambda: ht(), n=2)
+    busiest, leader = ht()
+    emit("throughput/ht_busiest_node_msgs", us, busiest)
+    emit("throughput/ht_leader_msgs", us, leader)
+    emit("throughput/spaxos_busiest_node_msgs", _t(lambda: spx(), n=2),
+         spx())
+
+
+def bench_engine() -> None:
+    """Vectorized ordering engine: decided ids/second (jit on this host;
+    the Pallas quorum kernel is the TPU drop-in for the same math)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import jaxsim
+    W, D, S, T = 2048, 128, 16, 32
+    rng = np.random.default_rng(0)
+    acks = jnp.asarray(rng.random((T, W, D)) < 0.05)
+    votes = jnp.asarray(rng.random((T, W, S)) < 0.4)
+    st = jaxsim.init_state(W, D, S)
+
+    def run():
+        out_st, _ = jaxsim.run_ticks(st, acks, votes,
+                                     diss_majority=D // 2 + 1,
+                                     seq_majority=S // 2 + 1)
+        return jax.block_until_ready(out_st.next_instance)
+    us = _t(run, n=5)
+    ordered = int(run())
+    emit("engine/ticks_32x2048", us, f"{ordered} ids ordered")
+    emit("engine/ids_per_sec", us, f"{ordered / (us / 1e6):.0f}")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.quorum import quorum_update
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    W, D = 1024, 1000
+    words = (D + 31) // 32
+    bits = jnp.asarray(rng.integers(0, 2**32, (W, words), dtype=np.uint32))
+    upd = jnp.asarray(rng.integers(0, 2**32, (W, words), dtype=np.uint32))
+    stable = jnp.zeros((W,), jnp.bool_)
+
+    def k_ref():
+        return jax.block_until_ready(
+            ref.quorum_ref(bits, upd, stable, majority=501)[1])
+    emit("kernels/quorum_ref_jit", _t(k_ref, n=10), f"W={W},D={D}")
+
+    def k_pal():
+        return jax.block_until_ready(
+            quorum_update(bits, upd, stable, majority=501,
+                          interpret=True)[1])
+    emit("kernels/quorum_pallas_interpret", _t(k_pal, n=3),
+         "(interpret mode = python loop; TPU timing n/a on CPU)")
+
+
+BENCHES = [bench_fig1, bench_fig2, bench_fig3, bench_fig45, bench_fig6,
+           bench_fig7, bench_delays, bench_sim_throughput, bench_engine,
+           bench_kernels]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: run HT-Paxos end to end on the executable simulator.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Spins up 5 disseminators, 3 sequencers, 1 standalone learner and 6
+clients on a lossy network, injects a leader crash, and shows that every
+learner executes the same request sequence (paper §4.3) while all clients
+get replies (§4.4)."""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.htpaxos import HTConfig, HTPaxosSim
+from repro.core.invariants import audit, issued_requests
+from repro.core.network import FaultModel
+
+
+def main() -> None:
+    cfg = HTConfig(n_diss=5, n_seq=3, n_learners=1, n_clients=6,
+                   batch_size=2, seed=0,
+                   d1_client_retry=150, d2_id_rebroadcast=100,
+                   d3_reply_retry=100, d4_missing_after=50,
+                   d5_resend_retry=60, d6_learner_pull=60)
+    cfg.ordering.election_timeout = 120
+    cfg.ordering.heartbeat_interval = 30
+    fault = FaultModel(drop_p=0.10, dup_p=0.05, jitter=3.0)
+    sim = HTPaxosSim(cfg, requests_per_client=4, client_gap=20.0,
+                     fault=fault, fault2=fault)
+    print("leader:", sim.leader.node_id)
+    sim.sched.at(200, lambda: sim.sequencers[0].crash())
+    sim.run(until=30_000)
+
+    print("replies:", sim.total_replied(), "/ 24")
+    print("new leader:", sim.leader.node_id)
+    seqs = sim.executed_sequences()
+    for node, seq in seqs.items():
+        print(f"  {node}: executed {len(seq)} requests")
+    rep = audit(seqs, issued_requests(sim))
+    print("safety audit:", "SAFE" if rep.safe else rep.violations)
+    print("\nbusiest-node message counts (the paper's point):")
+    for n in sim.diss_ids + sim.seq_ids:
+        tag = " <- ordering leader" if n == sim.leader.node_id else ""
+        print(f"  {n}: {sim.node_total_msgs(n)}{tag}")
+
+
+if __name__ == "__main__":
+    main()

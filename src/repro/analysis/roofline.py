@@ -1,0 +1,168 @@
+"""Roofline analysis over the dry-run JSON (TPU v5e targets).
+
+Per (arch × shape × mesh) cell, three terms in seconds/step (all numbers
+PER DEVICE, from the post-SPMD per-device program — see hlo_parse):
+
+    compute    = HLO_dot_flops / peak_bf16          (197 TFLOP/s/chip)
+    memory     = HLO_bytes      / HBM_bw            (819 GB/s/chip)
+    collective = collective_bytes / link_bw         (~50 GB/s/link ICI)
+
+plus MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE [+ attention quadratic
+term]) and the usefulness ratio MODEL_FLOPS / (HLO_flops × chips) — <1
+quantifies remat/redundant compute. Roofline fraction = model-compute
+time / dominant term: the score of how close the compiled program is to
+the hardware bound for *useful* work.
+
+Caveats recorded once here and referenced from EXPERIMENTS.md:
+  * HLO_bytes from the CPU-backend module over-counts bf16 buffers that
+    XLA-CPU legalizes to f32 (no native bf16) — memory terms are upper
+    bounds; TPU lowering keeps bf16.
+  * collective bytes use ring-algorithm wire conventions (hlo_parse
+    docstring) against a single effective ICI link — conservative.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+PEAK_BF16 = 197e12          # FLOP/s per v5e chip
+HBM_BW = 819e9              # B/s per chip
+LINK_BW = 50e9              # B/s per ICI link
+
+
+def active_params(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts from the config (routed experts
+    count k/E of their weights toward active)."""
+    from ..configs import registry
+    cfg = registry.get(arch)
+    import jax
+    from ..models import transformer as T
+    params, axes = T.init_lm(cfg, jax.random.PRNGKey(0), abstract=True)
+    total = 0.0
+    active = 0.0
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.structure(params).flatten_up_to(axes)
+    frac = (cfg.experts_per_token / cfg.n_experts) if cfg.n_experts else 1.0
+    for p, a in zip(flat_p, flat_a):
+        n = float(np.prod(p.shape))
+        total += n
+        active += n * (frac if (a and "expert" in a) else 1.0)
+    return total, active
+
+
+def model_flops(rec: dict) -> float:
+    """Global useful FLOPs per step for this cell."""
+    from ..configs import registry
+    cfg = registry.get(rec["arch"])
+    total, active = active_params(rec["arch"])
+    B, S = rec["global_batch"], rec["seq_len"]
+    hd = cfg.hd
+    H = cfg.n_heads
+    L = cfg.n_layers
+    if rec["kind"] == "train":
+        tokens = B * S
+        flops = 6.0 * active * tokens
+        # causal attention quadratic term (fwd 2·BS²Hh ×3 for bwd)
+        if cfg.attn_kind != "none":
+            flops += 3.0 * 2.0 * B * S * S * H * hd * L
+        return flops
+    if rec["kind"] == "prefill":
+        tokens = B * S
+        flops = 2.0 * active * tokens
+        if cfg.attn_kind != "none":
+            flops += 2.0 * B * S * S * H * hd * L
+        return flops
+    # decode: one token, KV length S
+    flops = 2.0 * active * B
+    if cfg.attn_kind != "none":
+        kv_len = S if cfg.window <= 0 else min(cfg.window, S)
+        flops += 2.0 * 2.0 * B * kv_len * H * hd * L
+    return flops
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    roofline_fraction: float
+    temp_gib: float
+    suggestion: str
+
+
+SUGGEST = {
+    "compute": ("compute-bound: raise MXU utilization (larger per-device "
+                "tiles, fewer remat recomputes, bf16 throughout)"),
+    "memory": ("HBM-bound: cut activation traffic (fuse norms/gates, "
+               "larger flash blocks, fewer saved residuals)"),
+    "collective": ("ICI-bound: reshard to cut cross-device traffic "
+                   "(wider EP/TP overlap, reduce-scatter grads instead "
+                   "of all-reduce, microbatch comm/compute overlap)"),
+}
+
+
+def analyze(rec: dict) -> Cell:
+    chips = rec["chips"]
+    comp = rec["hlo_flops_per_device"] / PEAK_BF16
+    memt = rec["hlo_bytes_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": comp, "memory": memt, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = rec["hlo_flops_per_device"] * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    model_time = mf / chips / PEAK_BF16
+    roof = model_time / max(terms.values()) if max(terms.values()) else 0.0
+    return Cell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=chips, compute_s=comp, memory_s=memt, collective_s=coll,
+        dominant=dom, model_flops=mf, useful_ratio=useful,
+        roofline_fraction=roof,
+        temp_gib=rec.get("memory_analysis", {})
+        .get("temp_size_in_bytes", 0) / 2**30,
+        suggestion=SUGGEST[dom])
+
+
+def markdown_table(cells: list[Cell]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | useful | roofline | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.compute_s:.3e} | "
+            f"{c.memory_s:.3e} | {c.collective_s:.3e} | {c.dominant} | "
+            f"{c.useful_ratio:.2f} | {c.roofline_fraction:.2f} | "
+            f"{c.temp_gib:.1f} |")
+    return hdr + "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="roofline.json")
+    args = ap.parse_args()
+    with open(args.results) as f:
+        recs = json.load(f)
+    cells = [analyze(r) for r in recs
+             if r.get("status") == "ok" and r["mesh"] == args.mesh]
+    cells.sort(key=lambda c: (c.arch, c.shape))
+    print(markdown_table(cells))
+    with open(args.json_out, "w") as f:
+        json.dump([c.__dict__ for c in cells], f, indent=1)
+    print(f"\nwrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Architecture registry: ``get(arch_id)`` → (full config, smoke config).
+
+Every assigned architecture has a module ``repro.configs.<id>`` (dashes →
+underscores) exporting ``CONFIG`` (exact published dims) and ``SMOKE``
+(same family, reduced dims — used by CPU smoke tests). ``MICROBATCHES``
+gives per-(arch, shape) gradient-accumulation defaults used by the trainer
+and dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek-v3-671b",
+    "llama4-maverick-400b-a17b",
+    "qwen3-14b",
+    "internlm2-1.8b",
+    "yi-34b",
+    "yi-6b",
+    "hymba-1.5b",
+    "rwkv6-3b",
+    "whisper-small",
+    "qwen2-vl-7b",
+]
+
+
+def _mod(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get(arch: str):
+    m = _mod(arch)
+    return m.CONFIG
+
+
+def get_smoke(arch: str):
+    return _mod(arch).SMOKE
+
+
+def microbatches(arch: str, shape_name: str) -> int:
+    m = _mod(arch)
+    return getattr(m, "MICROBATCHES", {}).get(shape_name, 1)

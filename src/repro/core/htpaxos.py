@@ -1,0 +1,583 @@
+"""HT-Paxos (paper §4) — executable implementation of Algorithm 1.
+
+Agent taxonomy (§3): proposers (clients), disseminators, sequencers,
+learners. Disseminator nodes co-host a learner (§3: "Any computing node that
+has a disseminator will also have a learner and in such nodes, both agents
+can share all incoming messages and data structures") — we implement the
+pair as one ``DissNode`` agent sharing ``requests_set``/``decided``.
+Standalone learner nodes are ``LearnerNode``. Sequencers run the ordering
+layer (classical Paxos on ids, ``classic.PaxosSequencer``).
+
+Algorithm-1 step numbers appear as ``# [step N]`` comments.
+
+Batching (§4.2): client requests are grouped into batches at each
+disseminator; the protocol then runs on ``batch_id``s. The id-multicast to
+sequencers (step 18) is itself batched — one LAN-2 multicast carries every
+id queued since the last flush, which is what makes the leader's incoming
+message count ``m`` per unit time (§5.1.1.2) rather than ``m²``.
+
+The FT variant (§4.2 "all disseminator sites also have a sequencer") is
+modeled by the ``site_map`` accounting: traffic of co-located agents is
+summed per site (the paper's Figs 3/7 busiest-*site* numbers).
+"""
+from __future__ import annotations
+
+import random
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .agents import Agent, SimBase
+from .classic import OrderingConfig, PaxosSequencer
+from .network import ID_BYTES, Lan, Msg, OVERHEAD
+
+
+@dataclass
+class HTConfig:
+    n_diss: int = 5                 # n disseminators (paper's m in §5)
+    n_seq: int = 3                  # s sequencers
+    n_learners: int = 0             # standalone learner nodes
+    n_clients: int = 4
+    request_bytes: int = 1024       # q, payload size (§5.2 uses 1024 / 512)
+    batch_size: int = 4             # requests per batch (n/m in §5)
+    batch_linger: float = 0.0       # 0 → flush same-instant arrivals together
+    id_linger: float = 0.0
+    # Δ timers (Algorithm 1). Large defaults so failure-free runs never fire.
+    d1_client_retry: float = 400.0
+    d2_id_rebroadcast: float = 300.0
+    d3_reply_retry: float = 300.0
+    d4_missing_after: float = 60.0
+    d5_resend_retry: float = 80.0
+    d6_learner_pull: float = 80.0
+    random_client_target: bool = True   # False → deterministic round-robin
+    seed: int = 0
+    ordering: OrderingConfig = field(default_factory=OrderingConfig)
+    # FT variant (§4.2): sequencer co-located on every disseminator site
+    fault_tolerant_colocation: bool = False
+
+
+def batch_bytes(n_requests: int, request_bytes: int) -> int:
+    # <batch_id, batch>: overhead + batch_id + per request (request_id + value)
+    return OVERHEAD + ID_BYTES + n_requests * (ID_BYTES + request_bytes)
+
+
+class ClientNode(Agent):
+    """[steps 1–11]"""
+
+    def __init__(self, sim: "HTPaxosSim", node_id: str, n_requests: int,
+                 start_t: float = 0.0, gap: float = 0.0) -> None:
+        super().__init__(sim, node_id)
+        self.hsim = sim
+        self.cfg = sim.cfg
+        self.rng = random.Random(zlib.crc32(f"{sim.cfg.seed}:{node_id}".encode()))
+        self.n_requests = n_requests
+        self.gap = gap
+        self.next_seq = 0
+        self.pending: dict[tuple, float] = {}     # rid -> send time
+        self.replied: dict[tuple, float] = {}     # rid -> reply time
+        self._fixed_diss = sim.diss_ids[
+            int(node_id[1:]) % len(sim.diss_ids)] if sim.diss_ids else None
+        self.after(start_t if start_t > 0 else 0.0, self._issue_next) \
+            if n_requests else None
+
+    def _pick_diss(self) -> str:
+        alive = [d for d in self.hsim.diss_ids
+                 if self.hsim.agents[d].alive]
+        if not alive:
+            alive = self.hsim.diss_ids
+        if self.cfg.random_client_target:
+            return self.rng.choice(alive)        # [step 3]
+        return self._fixed_diss if self._fixed_diss in alive else alive[0]
+
+    def _issue_next(self) -> None:
+        if self.next_seq >= self.n_requests:
+            return
+        rid = (self.node_id, self.next_seq)
+        self.next_seq += 1
+        self.pending[rid] = self.sched.now
+        self._send_request(rid)
+        self.periodic(self.cfg.d1_client_retry,                 # [steps 5–6]
+                      lambda rid=rid: self._send_request(rid),
+                      stop=lambda rid=rid: rid in self.replied)
+        if self.next_seq < self.n_requests:
+            self.after(self.gap, self._issue_next)
+
+    def _send_request(self, rid) -> None:
+        if rid in self.replied:
+            return
+        d = self._pick_diss()
+        self.send(self.hsim.lan1, d, "request",                 # [step 4]
+                  size=OVERHEAD + ID_BYTES + self.cfg.request_bytes,
+                  rid=rid)
+
+    def on_message(self, msg: Msg, lan: Lan) -> None:
+        if msg.kind == "reply":                                  # [step 7]
+            rid = msg.payload["rid"]
+            if rid not in self.replied:
+                self.replied[rid] = self.sched.now
+            self.send(self.hsim.lan2, msg.src, "client_ack",     # [step 8]
+                      size=OVERHEAD + ID_BYTES, rid=rid)
+
+
+class DissNode(Agent):
+    """Disseminator + co-located learner. [steps 12–34, 38–46]"""
+
+    def __init__(self, sim: "HTPaxosSim", node_id: str) -> None:
+        super().__init__(sim, node_id)
+        self.hsim = sim
+        self.cfg = sim.cfg
+        self.rng = random.Random(zlib.crc32(f"{sim.cfg.seed}:{node_id}:d".encode()))
+        # stable storage (§4.1.1: requests_set / decided survive failures)
+        self.stable.setdefault("requests_set", {})   # batch_id -> tuple(rid)
+        self.stable.setdefault("decided_ids", set())
+        self.stable.setdefault("instance_log", {})   # instance -> tuple(bid)
+        self.next_batch = 0
+        # volatile
+        self.pending_requests: list[tuple] = []      # rids awaiting batching
+        self.req_client: dict[tuple, str] = {}       # rid -> client id
+        self.own_acks: dict[tuple, set] = {}         # batch_id -> diss acks
+        self.own_batches: dict[tuple, tuple] = {}    # batch_id -> rids
+        self.replied_batches: set = set()
+        self.client_acked: set = set()               # rids acked by client
+        self.id_outbox: list[tuple] = []
+        self.id_seen_from: dict[tuple, str] = {}     # batch_id -> src (step 25)
+        self.undecided_known: set = set()            # for Δ2 rebroadcast
+        self.executed: list[tuple] = []              # learner execution order
+        self._exec_instance = 0                      # next instance to execute
+        self.anomaly_dup_ordered = 0                 # invariant: stays 0
+        self._batch_timer_armed = False
+        self._id_timer_armed = False
+        self.periodic(self.cfg.d2_id_rebroadcast, self._rebroadcast_ids)
+        self.periodic(self.cfg.d4_missing_after, self._check_missing)
+        self.periodic(self.cfg.d6_learner_pull, self._catch_up)
+
+    # ---- request intake & batching [steps 13–14, §4.2] -------------------
+
+    def on_message(self, msg: Msg, lan: Lan) -> None:
+        k, p = msg.kind, msg.payload
+        if k == "request":
+            rid = p["rid"]
+            self.req_client[rid] = msg.src
+            bid = self._rid_batch(rid)
+            if bid is not None:
+                # duplicate client retry for an already-batched request:
+                # re-reply if we already replied
+                if bid in self.replied_batches:
+                    self._reply_client(rid)
+                return
+            if rid in self.pending_requests:
+                return
+            self.pending_requests.append(rid)
+            if len(self.pending_requests) >= self.cfg.batch_size:
+                self._flush_batch()
+            elif not self._batch_timer_armed:
+                self._batch_timer_armed = True
+                self.after(self.cfg.batch_linger, self._flush_batch)
+        elif k == "batch":                                    # [steps 15–18]
+            self._on_batch(p["bid"], p["rids"], msg.src)
+        elif k == "batch_ack":                                # [step 20]
+            bid = p["bid"]
+            if bid in self.own_acks:
+                self.own_acks[bid].add(msg.src)
+                self._maybe_reply_clients(bid)
+        elif k == "client_ack":
+            self.client_acked.add(p["rid"])
+        elif k == "resend":                                   # [steps 27–28]
+            bid = p["bid"]
+            rids = self.stable["requests_set"].get(bid)
+            if rids is not None:
+                self.send(self.hsim.lan1, msg.src, "batch",
+                          size=batch_bytes(len(rids), self.cfg.request_bytes),
+                          bid=bid, rids=rids)
+        elif k == "decision":                                 # ordering layer
+            self._on_decision(p["entries"])
+
+    def _rid_batch(self, rid) -> Optional[tuple]:
+        for bid, rids in self.own_batches.items():
+            if rid in rids:
+                return bid
+        return None
+
+    def _flush_batch(self) -> None:
+        self._batch_timer_armed = False
+        if not self.pending_requests:
+            return
+        rids = tuple(self.pending_requests)
+        self.pending_requests = []
+        bid = (self.node_id, self.next_batch)
+        self.next_batch += 1
+        self.own_batches[bid] = rids
+        self.own_acks[bid] = set()
+        # [step 14] multicast batch to all disseminators and learners, LAN-1
+        # (self included — the paper counts self-delivery, §5.1.1.1)
+        dsts = self.hsim.diss_ids + self.hsim.learner_ids
+        self.multicast(self.hsim.lan1, dsts, "batch",
+                       size=batch_bytes(len(rids), self.cfg.request_bytes),
+                       bid=bid, rids=rids)
+
+    def _on_batch(self, bid, rids, src) -> None:
+        rs = self.stable["requests_set"]
+        known = bid in rs
+        rs[bid] = rids                                         # [step 16]
+        self.id_seen_from[bid] = src
+        if bid not in self.stable["decided_ids"]:
+            self.undecided_known.add(bid)
+        # [step 17] ack to the sender only (vs S-Paxos all-to-all ack)
+        self.send(self.hsim.lan2, src, "batch_ack",
+                  size=OVERHEAD + ID_BYTES, bid=bid)
+        if not known:
+            # [step 18] queue id for the (batched) multicast to sequencers
+            self.id_outbox.append(bid)
+            if not self._id_timer_armed:
+                self._id_timer_armed = True
+                self.after(self.cfg.id_linger, self._flush_ids)
+        self._try_execute()
+
+    def _flush_ids(self) -> None:
+        self._id_timer_armed = False
+        if not self.id_outbox:
+            return
+        ids = tuple(self.id_outbox)
+        self.id_outbox = []
+        self.multicast(self.hsim.lan2, self.hsim.seq_ids, "ids",
+                       size=OVERHEAD + ID_BYTES * len(ids), ids=ids)
+
+    def _rebroadcast_ids(self) -> None:
+        # [steps 18–19] Δ2: re-multicast undecided known ids to sequencers
+        if not self.undecided_known:
+            return
+        ids = tuple(sorted(self.undecided_known))
+        self.multicast(self.hsim.lan2, self.hsim.seq_ids, "ids",
+                       size=OVERHEAD + ID_BYTES * len(ids), ids=ids)
+
+    # ---- client replies [steps 20–24] ---------------------------------------
+
+    def _maybe_reply_clients(self, bid) -> None:
+        rids = self.own_batches.get(bid)
+        if rids is None or bid in self.replied_batches:
+            return
+        majority = len(self.hsim.diss_ids) // 2 + 1
+        acks = self.own_acks.get(bid, set())
+        if len(acks) >= majority or bid in self.stable["decided_ids"]:
+            self.replied_batches.add(bid)
+            for rid in rids:
+                self._reply_client(rid)
+                self.periodic(self.cfg.d3_reply_retry,        # [step 24]
+                              lambda rid=rid: self._reply_client(rid),
+                              stop=lambda rid=rid: rid in self.client_acked)
+
+    def _reply_client(self, rid) -> None:
+        if rid in self.client_acked:
+            return
+        client = self.req_client.get(rid)
+        if client is None:
+            client = rid[0]
+        self.send(self.hsim.lan2, client, "reply",
+                  size=OVERHEAD + ID_BYTES, rid=rid)           # [step 23]
+
+    # ---- missing-payload recovery [steps 25–34] ------------------------------
+
+    def _check_missing(self) -> None:
+        rs = self.stable["requests_set"]
+        for bid in sorted(self.stable["decided_ids"]):
+            if bid not in rs:
+                # [steps 32–34] decided but payload missing: pull from any
+                # other disseminator, retried by the periodic Δ4/Δ5 sweep
+                others = [d for d in self.hsim.diss_ids if d != self.node_id]
+                if others:
+                    tgt = self.rng.choice(others)
+                    self.send(self.hsim.lan2, tgt, "resend",
+                              size=OVERHEAD + ID_BYTES, bid=bid)
+
+    # ---- learner role [steps 38–46] -----------------------------------------
+
+    def _on_decision(self, entries) -> None:
+        """Record ordering-layer decisions keyed by *instance number* — the
+        paper: "Every Learner learns request_id sequentially as per the
+        instance numbers of classical Paxos" (§4.1.3). Arrival order of
+        decision messages is irrelevant; execution only advances over a
+        contiguous instance prefix."""
+        log = self.stable["instance_log"]
+        for (inst, value) in entries:
+            if inst in log:
+                continue
+            log[inst] = value
+            for bid in value:
+                if bid == "__noop__":
+                    continue
+                self.stable["decided_ids"].add(bid)
+                self.undecided_known.discard(bid)
+                self._maybe_reply_clients(bid)
+        self._try_execute()
+
+    def _catch_up(self) -> None:
+        """Catch-up pull: whenever the execution-frontier instance is not
+        yet known locally, ask a sequencer for the decided log from the
+        frontier (covers both dropped decision multicasts and restart
+        recovery, where the node cannot know how far the log advanced
+        while it was down). A no-op reply costs one message."""
+        log = self.stable["instance_log"]
+        if self._exec_instance not in log:
+            tgt = self.rng.choice(self.hsim.seq_ids)
+            self.send(self.hsim.lan2, tgt, "learn_req",
+                      size=OVERHEAD + ID_BYTES, **{"from": self._exec_instance})
+
+    def _try_execute(self) -> None:
+        log = self.stable["instance_log"]
+        rs = self.stable["requests_set"]
+        executed_bids = getattr(self, "_executed_bids", None)
+        if executed_bids is None:
+            executed_bids = self._executed_bids = set()
+        if not hasattr(self, "_executed_rids"):
+            self._executed_rids = set()
+        while self._exec_instance in log:
+            value = log[self._exec_instance]
+            bids = [b for b in value if b != "__noop__"]
+            if any(b not in rs for b in bids):
+                break  # wait for payload pull (Δ4/Δ5 machinery)
+            for bid in bids:
+                if bid in executed_bids:
+                    self.anomaly_dup_ordered += 1
+                    continue
+                executed_bids.add(bid)
+                for rid in rs[bid]:
+                    # §3: "learners discard duplicate proposals" — a client
+                    # Δ1-retry may have landed the same request in a second
+                    # disseminator's batch; execute each rid exactly once
+                    if rid in self._executed_rids:
+                        continue
+                    self._executed_rids.add(rid)
+                    self.executed.append(rid)
+            self._exec_instance += 1
+
+    def on_restart(self) -> None:
+        # volatile state lost; stable requests_set / instance_log survive
+        self.pending_requests = []
+        self.own_acks = {}
+        self.id_outbox = []
+        self._batch_timer_armed = False
+        self._id_timer_armed = False
+        self.executed = []
+        self._exec_instance = 0
+        self._executed_bids = set()
+        self._executed_rids = set()
+        self.undecided_known = set(
+            bid for bid in self.stable["requests_set"]
+            if bid not in self.stable["decided_ids"])
+        self.periodic(self.cfg.d2_id_rebroadcast, self._rebroadcast_ids)
+        self.periodic(self.cfg.d4_missing_after, self._check_missing)
+        self.periodic(self.cfg.d6_learner_pull, self._catch_up)
+        self._try_execute()
+
+
+class LearnerNode(Agent):
+    """Standalone learner [steps 39–46]."""
+
+    def __init__(self, sim: "HTPaxosSim", node_id: str) -> None:
+        super().__init__(sim, node_id)
+        self.hsim = sim
+        self.cfg = sim.cfg
+        self.rng = random.Random(zlib.crc32(f"{sim.cfg.seed}:{node_id}:l".encode()))
+        self.stable.setdefault("requests_set", {})
+        self.stable.setdefault("instance_log", {})
+        self.executed: list[tuple] = []
+        self._exec_instance = 0
+        self._executed_bids: set = set()
+        self._executed_rids: set = set()
+        self.anomaly_dup_ordered = 0
+        self.periodic(self.cfg.d6_learner_pull, self._pull_missing)
+
+    def on_message(self, msg: Msg, lan: Lan) -> None:
+        k, p = msg.kind, msg.payload
+        if k == "batch":                                      # [steps 41–42]
+            self.stable["requests_set"][p["bid"]] = p["rids"]
+            self._try_execute()
+        elif k == "decision":
+            log = self.stable["instance_log"]
+            for (inst, value) in p["entries"]:
+                log.setdefault(inst, value)
+            self._try_execute()
+
+    def _pull_missing(self) -> None:                          # [steps 43–45]
+        rs = self.stable["requests_set"]
+        log = self.stable["instance_log"]
+        # missing payloads for decided instances
+        for inst, value in log.items():
+            if inst < self._exec_instance:
+                continue
+            for bid in value:
+                if bid != "__noop__" and bid not in rs:
+                    tgt = self.rng.choice(self.hsim.diss_ids)
+                    self.send(self.hsim.lan2, tgt, "resend",
+                              size=OVERHEAD + ID_BYTES, bid=bid)
+        # instance-frontier repair (incl. restart recovery)
+        if self._exec_instance not in log:
+            tgt = self.rng.choice(self.hsim.seq_ids)
+            self.send(self.hsim.lan2, tgt, "learn_req",
+                      size=OVERHEAD + ID_BYTES, **{"from": self._exec_instance})
+
+    def _try_execute(self) -> None:
+        log = self.stable["instance_log"]
+        rs = self.stable["requests_set"]
+        while self._exec_instance in log:
+            bids = [b for b in log[self._exec_instance] if b != "__noop__"]
+            if any(b not in rs for b in bids):
+                break
+            for bid in bids:
+                if bid in self._executed_bids:
+                    self.anomaly_dup_ordered += 1
+                    continue
+                self._executed_bids.add(bid)
+                for rid in rs[bid]:
+                    if rid in self._executed_rids:            # §3 dedup
+                        continue
+                    self._executed_rids.add(rid)
+                    self.executed.append(rid)                 # [step 46]
+            self._exec_instance += 1
+
+    def on_restart(self) -> None:
+        self.executed = []
+        self._exec_instance = 0
+        self._executed_bids = set()
+        self._executed_rids = set()
+        self.periodic(self.cfg.d6_learner_pull, self._pull_missing)
+        self._try_execute()
+
+
+class HTSequencer(PaxosSequencer):
+    """[steps 35–37] + ordering layer (§4.1.3).
+
+    Maintains only ``stable_ids`` and ``decided`` (the paper's point vs
+    S-Paxos' four sets)."""
+
+    def __init__(self, sim: "HTPaxosSim", node_id: str, rank: int,
+                 peers: list[str], cfg: OrderingConfig,
+                 initial_leader: bool = False) -> None:
+        super().__init__(sim, node_id, rank, peers, cfg, initial_leader)
+        self.hsim = sim
+        self.stable.setdefault("stable_ids", [])     # FIFO of stable batch_ids
+        self.stable.setdefault("stable_set", set())
+        self.stable.setdefault("decided_ids", set())
+        self.id_votes: dict[tuple, set] = {}         # batch_id -> diss heard
+
+    # sequencer stability rule [steps 36–37]
+    def on_other_message(self, msg: Msg, lan: Lan) -> None:
+        if msg.kind != "ids":
+            return
+        majority = len(self.hsim.diss_ids) // 2 + 1
+        for bid in msg.payload["ids"]:
+            if bid in self.stable["stable_set"] or \
+                    bid in self.stable["decided_ids"]:
+                continue
+            votes = self.id_votes.setdefault(bid, set())
+            votes.add(msg.src)
+            if len(votes) >= majority:
+                self.stable["stable_ids"].append(bid)
+                self.stable["stable_set"].add(bid)
+                del self.id_votes[bid]
+        if self.is_leader:
+            self._flush_pool()
+
+    def pool_pull(self, k: int) -> list:
+        # Paper §4.1.3: proposing does NOT delete from stable_ids — deletion
+        # happens on decide. ``stable_set`` ("stabilized, not yet decided")
+        # stays populated while an id is in flight, which blocks the Δ2
+        # disseminator rebroadcasts from re-stabilizing (and re-ordering!)
+        # an id that is merely still undecided.
+        out = []
+        fifo = self.stable["stable_ids"]
+        while fifo and len(out) < k:
+            bid = fifo.pop(0)
+            if bid in self.stable["decided_ids"]:
+                continue  # dedup across failover (§4.1.3)
+            if bid in out:
+                continue
+            out.append(bid)
+        return out
+
+    def on_decide(self, instance: int, value) -> None:
+        for bid in value:
+            if bid != "__noop__":
+                self.stable["decided_ids"].add(bid)
+                self.stable["stable_set"].discard(bid)
+
+    def on_abandon(self, values: list) -> None:
+        # step-down with proposals in flight: return undecided ids to the
+        # pool so they are not lost if no other sequencer has them queued
+        fifo = self.stable["stable_ids"]
+        for value in values:
+            for bid in value:
+                if bid != "__noop__" and \
+                        bid not in self.stable["decided_ids"] and \
+                        bid not in fifo:
+                    fifo.append(bid)
+
+    def decision_targets(self) -> list[str]:
+        # leader multicasts the decision to all sequencers, disseminators
+        # and learners (§5.1.1.2)
+        return ([p for p in self.peers if p != self.node_id]
+                + self.hsim.diss_ids + self.hsim.learner_ids)
+
+
+class HTPaxosSim(SimBase):
+    """Builds the topology and runs HT-Paxos end to end."""
+
+    def __init__(self, cfg: HTConfig, requests_per_client: int = 1,
+                 client_gap: float = 0.0, fault=None, fault2=None,
+                 latency: float = 1.0) -> None:
+        super().__init__(seed=cfg.seed, latency=latency,
+                         fault=fault, fault2=fault2)
+        self.cfg = cfg
+        self.diss_ids = [f"d{i}" for i in range(cfg.n_diss)]
+        self.seq_ids = [f"s{i}" for i in range(cfg.n_seq)]
+        self.learner_ids = [f"l{i}" for i in range(cfg.n_learners)]
+        self.client_ids = [f"c{i}" for i in range(cfg.n_clients)]
+        # site accounting (FT variant co-locates sequencer k on diss site k)
+        self.site_map: dict[str, str] = {}
+        for i, d in enumerate(self.diss_ids):
+            self.site_map[d] = d
+        for i, s in enumerate(self.seq_ids):
+            if cfg.fault_tolerant_colocation and i < len(self.diss_ids):
+                self.site_map[s] = self.diss_ids[i]
+            else:
+                self.site_map[s] = s
+
+        self.disseminators = [DissNode(self, d) for d in self.diss_ids]
+        self.sequencers = [
+            HTSequencer(self, s, rank=i, peers=self.seq_ids,
+                        cfg=cfg.ordering, initial_leader=(i == 0))
+            for i, s in enumerate(self.seq_ids)]
+        self.learners = [LearnerNode(self, l) for l in self.learner_ids]
+        self.clients = [
+            ClientNode(self, c, n_requests=requests_per_client,
+                       gap=client_gap)
+            for c in self.client_ids]
+        self.attach_all()
+        for s in self.sequencers:
+            s.start()
+
+    # -- convenience ----------------------------------------------------------
+
+    @property
+    def leader(self) -> Optional[HTSequencer]:
+        for s in self.sequencers:
+            if s.is_leader and s.alive:
+                return s
+        return None
+
+    def all_learner_agents(self) -> list:
+        return list(self.disseminators) + list(self.learners)
+
+    def executed_sequences(self) -> dict[str, list]:
+        return {a.node_id: list(a.executed) for a in self.all_learner_agents()}
+
+    def total_replied(self) -> int:
+        return sum(len(c.replied) for c in self.clients)
+
+    def site_total_msgs(self, site: str) -> int:
+        return sum(self.node_total_msgs(n) for n, s in self.site_map.items()
+                   if s == site)
+
+    def site_total_bytes(self, site: str) -> int:
+        return sum(self.node_total_bytes(n) for n, s in self.site_map.items()
+                   if s == site)

@@ -1,0 +1,91 @@
+"""SMR safety/progress invariant checkers (paper §4.3–§4.4).
+
+Used by the hypothesis property tests and by the runtime integration: any
+simulation (HT-Paxos or a baseline) can be audited with ``audit()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class AuditReport:
+    prefix_consistent: bool = True
+    no_duplicates: bool = True
+    nontrivial: bool = True
+    violations: list = field(default_factory=list)
+
+    @property
+    def safe(self) -> bool:
+        return self.prefix_consistent and self.no_duplicates and self.nontrivial
+
+
+def check_prefix_consistency(sequences: dict[str, list]) -> list:
+    """§4.3.1: no two learners learn values in different orders — every
+    learner's executed sequence must be a prefix of the longest one."""
+    out = []
+    if not sequences:
+        return out
+    ref = max(sequences.values(), key=len)
+    for node, seq in sequences.items():
+        if seq != ref[: len(seq)]:
+            # locate first divergence for the report
+            for i, (a, b) in enumerate(zip(seq, ref)):
+                if a != b:
+                    out.append((node, i, a, b))
+                    break
+            else:
+                out.append((node, len(ref), "<len>", "<len>"))
+    return out
+
+
+def check_no_duplicates(sequences: dict[str, list]) -> list:
+    out = []
+    for node, seq in sequences.items():
+        if len(seq) != len(set(seq)):
+            seen = set()
+            for x in seq:
+                if x in seen:
+                    out.append((node, x))
+                    break
+                seen.add(x)
+    return out
+
+
+def check_nontriviality(sequences: dict[str, list], issued: set) -> list:
+    """§4.3.2 Nontriviality: learners learn only proposed client requests."""
+    out = []
+    for node, seq in sequences.items():
+        for x in seq:
+            if x not in issued:
+                out.append((node, x))
+                break
+    return out
+
+
+def audit(sequences: dict[str, list], issued: set | None = None)\
+        -> AuditReport:
+    rep = AuditReport()
+    v = check_prefix_consistency(sequences)
+    if v:
+        rep.prefix_consistent = False
+        rep.violations += [("prefix", *x) for x in v]
+    v = check_no_duplicates(sequences)
+    if v:
+        rep.no_duplicates = False
+        rep.violations += [("dup", *x) for x in v]
+    if issued is not None:
+        v = check_nontriviality(sequences, issued)
+        if v:
+            rep.nontrivial = False
+            rep.violations += [("nontrivial", *x) for x in v]
+    return rep
+
+
+def issued_requests(sim) -> set:
+    """All rids issued by a simulation's clients."""
+    out = set()
+    for c in sim.clients:
+        for i in range(c.next_seq):
+            out.add((c.node_id, i))
+    return out

@@ -1,0 +1,141 @@
+"""Vectorized HT-Paxos quorum/ordering data plane in JAX.
+
+This is the paper's sequencer hot path (§4.1 steps 36–37 + ordering layer)
+re-thought for TPU: instead of processing id-multicast messages one at a
+time (the GPU/CPU idiom would be per-message atomics on a hash table), the
+engine keeps a *sliding window* of W in-flight batch_ids and processes
+acknowledgement traffic as dense ``bool[W, D]`` tiles:
+
+  1. **pack**   — OR the tile into packed uint32 ack bitsets ``[W, ⌈D/32⌉]``
+  2. **count**  — popcount + row-sum (``lax.population_count``)
+  3. **stabilize** — threshold against the disseminator majority (step 36)
+  4. **order**  — assign consecutive ordering instances to newly-stable ids
+                  with an exclusive cumsum (the leader's §4.1.3 proposal
+                  assignment), entirely inside ``jax.lax`` (scan/jit-safe)
+  5. **commit** — the same quorum primitive applied to sequencer phase-2b
+                  bitsets ``[W, S]`` decides instances (classical-Paxos
+                  majority at the leader, §2.1.1 message-optimized mode)
+
+Everything is a pure function over a ``QuorumState`` pytree: jit-able,
+vmappable, shardable along W (and scannable over ticks for throughput
+benchmarks). ``repro.kernels.quorum`` provides the fused Pallas TPU kernel
+for steps 1–3; this module is its reference implementation and the
+CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuorumState(NamedTuple):
+    """Sliding window of W in-flight ids at the sequencer group."""
+    ack_bits: jax.Array      # uint32[W, WORDS_D] — disseminator id-multicasts
+    vote_bits: jax.Array     # uint32[W, WORDS_S] — sequencer phase-2b acks
+    stable: jax.Array        # bool[W]   (step 37: member of stable_ids)
+    instance: jax.Array      # int32[W]  assigned ordering instance, -1 = none
+    decided: jax.Array       # bool[W]   committed by 2b majority
+    next_instance: jax.Array  # int32[]  leader's instance counter
+
+
+def _words(n: int) -> int:
+    return (n + 31) // 32
+
+
+def init_state(window: int, n_diss: int, n_seq: int) -> QuorumState:
+    return QuorumState(
+        ack_bits=jnp.zeros((window, _words(n_diss)), jnp.uint32),
+        vote_bits=jnp.zeros((window, _words(n_seq)), jnp.uint32),
+        stable=jnp.zeros((window,), jnp.bool_),
+        instance=jnp.full((window,), -1, jnp.int32),
+        decided=jnp.zeros((window,), jnp.bool_),
+        next_instance=jnp.zeros((), jnp.int32),
+    )
+
+
+def pack_tile(acks: jax.Array) -> jax.Array:
+    """bool[W, D] → uint32[W, ⌈D/32⌉] packed bitset (little-endian bits)."""
+    W, D = acks.shape
+    words = _words(D)
+    pad = words * 32 - D
+    a = jnp.pad(acks, ((0, 0), (0, pad))).reshape(W, words, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(a.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+def popcount_rows(bits: jax.Array) -> jax.Array:
+    """uint32[W, words] → int32[W] total set bits per row."""
+    return jnp.sum(jax.lax.population_count(bits).astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("majority",))
+def absorb_acks(state: QuorumState, acks: jax.Array, *, majority: int)\
+        -> QuorumState:
+    """Steps 1–3: OR in a dense ack tile and refresh stability flags."""
+    ack_bits = state.ack_bits | pack_tile(acks)
+    counts = popcount_rows(ack_bits)
+    stable = state.stable | (counts >= majority)
+    return state._replace(ack_bits=ack_bits, stable=stable)
+
+
+@jax.jit
+def assign_instances(state: QuorumState) -> tuple[QuorumState, jax.Array]:
+    """Step 4: leader assigns consecutive instances to newly-stable ids.
+
+    Returns (state, assigned) where assigned[i] is the instance given to
+    slot i this call or -1."""
+    fresh = state.stable & (state.instance < 0)
+    # exclusive cumsum gives each fresh slot its offset in FIFO (slot) order
+    offs = jnp.cumsum(fresh.astype(jnp.int32)) - fresh.astype(jnp.int32)
+    assigned = jnp.where(fresh, state.next_instance + offs, -1)
+    instance = jnp.where(fresh, assigned, state.instance)
+    nxt = state.next_instance + jnp.sum(fresh, dtype=jnp.int32)
+    return state._replace(instance=instance, next_instance=nxt), assigned
+
+
+@functools.partial(jax.jit, static_argnames=("majority",))
+def absorb_votes(state: QuorumState, votes: jax.Array, *, majority: int)\
+        -> tuple[QuorumState, jax.Array]:
+    """Step 5: classical-Paxos phase-2b commit — same quorum primitive over
+    sequencer bitsets. Returns (state, newly_decided mask)."""
+    vote_bits = state.vote_bits | pack_tile(votes)
+    counts = popcount_rows(vote_bits)
+    committed = (counts >= majority) & (state.instance >= 0)
+    newly = committed & ~state.decided
+    return state._replace(vote_bits=vote_bits,
+                          decided=state.decided | committed), newly
+
+
+@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority"))
+def engine_tick(state: QuorumState, acks: jax.Array, votes: jax.Array,
+                *, diss_majority: int, seq_majority: int)\
+        -> tuple[QuorumState, dict]:
+    """One fused tick: absorb dissemination acks, stabilize, order, commit."""
+    state = absorb_acks(state, acks, majority=diss_majority)
+    state, assigned = assign_instances(state)
+    state, newly_decided = absorb_votes(state, votes, majority=seq_majority)
+    return state, {"assigned": assigned, "newly_decided": newly_decided}
+
+
+def run_ticks(state: QuorumState, acks_seq: jax.Array, votes_seq: jax.Array,
+              *, diss_majority: int, seq_majority: int)\
+        -> tuple[QuorumState, dict]:
+    """lax.scan over T ticks of [T, W, D] / [T, W, S] traffic (throughput
+    benchmark path — the whole protocol window advances per tick)."""
+    def body(st, tv):
+        a, v = tv
+        st, out = engine_tick(st, a, v, diss_majority=diss_majority,
+                              seq_majority=seq_majority)
+        return st, out
+    return jax.lax.scan(body, state, (acks_seq, votes_seq))
+
+
+# -- pure-numpy oracle for property tests ------------------------------------
+
+def oracle_quorum(acc_np: np.ndarray, majority: int) -> np.ndarray:
+    """Reference stability: row popcount ≥ majority over a bool matrix."""
+    return acc_np.sum(axis=1) >= majority

@@ -1,0 +1,41 @@
+"""Jit'd dispatch wrappers: Pallas kernels on TPU, jnp reference on CPU.
+
+The model layer calls these entry points; this container (CPU) always
+takes the reference path at runtime while the Pallas path is exercised in
+interpret mode by the kernel test-suite. On a TPU runtime the same code
+dispatches to the compiled kernels — no model-layer changes needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .quorum import quorum_update
+from .rwkv6_scan import wkv6_chunked
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = -1):
+    if on_tpu():
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=False)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def quorum(bits, update, stable, *, majority: int):
+    if on_tpu():
+        return quorum_update(bits, update, stable, majority=majority,
+                             interpret=False)
+    return ref.quorum_ref(bits, update, stable, majority=majority)
+
+
+def wkv6(r, k, v, wlog, u, *, chunk: int = 128):
+    if on_tpu():
+        return wkv6_chunked(r, k, v, wlog, u, chunk=chunk,
+                            interpret=False)
+    return ref.wkv6_ref(r, k, v, wlog, u)

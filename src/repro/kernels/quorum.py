@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused ack-bitset OR + popcount + majority threshold.
+
+The HT-Paxos sequencer hot path (§4.1 step 36: "upon receiving same
+<request_id> from at least a majority of disseminators") over a window of
+W in-flight ids. The GPU idiom would be one atomic per (id, disseminator)
+ack; the TPU idiom is a dense VMEM tile pass:
+
+    new_bits = bits | update          (uint32 [W, WORDS])
+    counts   = Σ_words popcount(new_bits)
+    stable  |= counts >= majority
+
+One kernel launch processes a [BLOCK_W, WORDS] tile per grid step; rows
+are 8-aligned, the word lane dim is padded to 128 lanes by the caller-
+chosen WORDS (we keep WORDS as-is — it is ≤ 32 for 1000 disseminators,
+well under a VREG row; Mosaic handles sub-128 lanes with masking).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_W = 256
+
+
+def _quorum_kernel(bits_ref, update_ref, stable_in_ref,
+                   bits_out_ref, counts_ref, stable_out_ref,
+                   *, majority: int):
+    bits = bits_ref[...]
+    upd = update_ref[...]
+    new = bits | upd
+    bits_out_ref[...] = new
+    counts = jnp.sum(jax.lax.population_count(new).astype(jnp.int32),
+                     axis=1)
+    counts_ref[...] = counts
+    stable_out_ref[...] = stable_in_ref[...] | (counts >= majority)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("majority", "block_w", "interpret"))
+def quorum_update(bits: jax.Array, update: jax.Array, stable: jax.Array,
+                  *, majority: int, block_w: int = DEFAULT_BLOCK_W,
+                  interpret: bool = True):
+    """bits/update: uint32[W, WORDS]; stable: bool[W].
+    Returns (new_bits, counts int32[W], new_stable bool[W]).
+
+    interpret=True executes the kernel body in Python on CPU (how this
+    container validates it); on a TPU runtime pass interpret=False."""
+    W, WORDS = bits.shape
+    block_w = min(block_w, W)
+    assert W % block_w == 0, (W, block_w)
+    grid = (W // block_w,)
+    kernel = functools.partial(_quorum_kernel, majority=majority)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_w, WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(bits, update, stable)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These delegate to the production jnp paths in ``repro.models`` /
+``repro.core`` so the kernels are validated against exactly the math the
+framework runs on CPU and in the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quorum_ref(bits, update, stable, *, majority: int):
+    new = bits | update
+    counts = jnp.sum(jax.lax.population_count(new).astype(jnp.int32),
+                     axis=1)
+    return new, counts, stable | (counts >= majority)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=-1):
+    from ..models.layers import _causal_window_mask, attend
+    Sq, Skv = q.shape[1], k.shape[1]
+    if causal:
+        mask = _causal_window_mask(Sq, Skv, window, 0)
+    else:
+        mask = jnp.ones((Sq, Skv), jnp.bool_)
+    return attend(q, k, v, mask)
+
+
+def wkv6_ref(r, k, v, wlog, u):
+    """Sequential WKV6 recurrence (exact oracle). Shapes as in
+    kernels.rwkv6_scan.wkv6_chunked. Returns f32 [B,S,H,hd]."""
+    B, S, H, hd = r.shape
+    state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    outs = []
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = wlog.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    for t in range(S):
+        kv = jnp.einsum("bhk,bhv->bhkv", kf[:, t], vf[:, t])
+        o = jnp.einsum("bhk,bhkv->bhv", rf[:, t],
+                       state + uf[None, :, :, None] * kv)
+        state = state * jnp.exp(wf[:, t])[..., None] + kv
+        outs.append(o)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (jax locks the device count on first init).
+# Placeholder host devices exist ONLY in this launcher — tests/benches see
+# the real single CPU device.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this launcher:
+  * builds abstract state/batch/cache (ShapeDtypeStruct — no allocation),
+  * jits the step with explicit in/out shardings on the production mesh,
+  * ``.lower().compile()`` — any sharding mismatch, non-divisible dim, or
+    unsupported collective fails HERE, which is the point of the exercise,
+  * records ``memory_analysis()`` (bytes/device — proves it fits),
+    ``cost_analysis()`` (XLA's per-device flops) and the loop-corrected
+    flops/bytes/collective-bytes from ``repro.analysis.hlo_parse``,
+  * appends everything to a JSON results file consumed by
+    ``repro.analysis.roofline`` and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out dryrun_results.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..analysis.hlo_parse import analyze_module
+from ..configs import registry
+from ..models import decode as D
+from ..models import transformer as T
+from ..models.common import SHAPES, ModelConfig, param_count
+from ..models import pconstraint
+from ..train.optimizer import OptConfig, choose_optimizer
+from ..train.trainer import make_state, make_train_step
+from .mesh import make_production_mesh
+from .sharding import (batch_pspec, cache_shardings, spec_for,
+                       tree_shardings)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per (arch × shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+    Modality frontends are STUBS: audio supplies precomputed frame
+    embeddings, vlm supplies patch/text embeddings + M-RoPE position ids."""
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    i32, bf16 = jnp.int32, cfg.dtype
+    sds = jax.ShapeDtypeStruct
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((B, S, cfg.d_model), bf16)
+            batch["positions"] = sds((3, B, S), i32)
+            batch["labels"] = sds((B, S), i32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = sds((B, cfg.encoder_len, cfg.d_model), bf16)
+        return batch
+    # decode: one new token against a seq_len KV cache
+    batch = {"index": sds((), i32)}
+    if cfg.family == "vlm":
+        batch["embeds"] = sds((B, 1, cfg.d_model), bf16)
+        batch["positions"] = sds((3, B, 1), i32)
+    else:
+        batch["token"] = sds((B, 1), i32)
+    return batch
+
+
+def batch_shardings(mesh, batch: dict) -> dict:
+    out = {}
+    for k, v in batch.items():
+        if k == "positions":
+            out[k] = NamedSharding(mesh, batch_pspec(mesh, v.shape,
+                                                     batch_dim=1))
+        elif v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(
+                mesh, batch_pspec(mesh, v.shape, batch_dim=0,
+                                  seq_dim=1 if v.ndim > 1 else None))
+    return out
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: long_500k requires "
+                       "sub-quadratic attention (spec skip, DESIGN.md)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               keep_hlo: bool = False) -> dict:
+    cfg = registry.get(arch)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod
+        else "single", "chips": n_chips, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+    }
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    batch = input_specs(cfg, shape_name)
+    b_sh = batch_shardings(mesh, batch)
+    pconstraint.set_mesh(mesh)   # activation constraints active while tracing
+
+    with mesh:
+        if cell.kind == "train":
+            n_params = param_count(T.init_lm(cfg, jax.random.PRNGKey(0),
+                                             abstract=True)[0])
+            opt_kind = choose_optimizer(n_params)
+            opt_cfg = OptConfig(kind=opt_kind)
+            grad_dtype = jnp.bfloat16 if n_params >= 3e11 else jnp.float32
+            micro = registry.microbatches(arch, shape_name)
+            state, state_axes = make_state(cfg, opt_cfg, abstract=True)
+            s_sh = tree_shardings(mesh, state, state_axes)
+            step = make_train_step(cfg, opt_cfg, microbatches=micro,
+                                   global_batch=cell.global_batch,
+                                   grad_dtype=grad_dtype)
+            jf = jax.jit(step, in_shardings=(s_sh, b_sh),
+                         out_shardings=(s_sh, None), donate_argnums=0)
+            lowered = jf.lower(state, batch)
+            rec.update(opt=opt_kind, microbatches=micro,
+                       params=n_params,
+                       grad_dtype=str(jnp.dtype(grad_dtype)))
+        elif cell.kind == "prefill":
+            params, axes = T.init_lm(cfg, jax.random.PRNGKey(0),
+                                     abstract=True)
+            p_sh = tree_shardings(mesh, params, axes)
+
+            def prefill_fn(params, batch):
+                return D.prefill(params, cfg, batch)[0]
+            jf = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+            lowered = jf.lower(params, batch)
+            rec.update(params=param_count(params))
+        else:  # decode
+            params, axes = T.init_lm(cfg, jax.random.PRNGKey(0),
+                                     abstract=True)
+            p_sh = tree_shardings(mesh, params, axes)
+            cspec = D.cache_spec(cfg, cell.global_batch, cell.seq_len)
+            cache = D.cache_abstract(cspec)
+            c_sh = cache_shardings(mesh, cspec)
+            fn = (D.decode_step_encdec if cfg.is_encoder_decoder
+                  else D.decode_step)
+
+            def decode_fn(params, batch, cache):
+                return fn(params, cfg, batch, cache)
+            jf = jax.jit(decode_fn, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=2)
+            lowered = jf.lower(params, batch, cache)
+            rec.update(params=param_count(params))
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    pconstraint.set_mesh(None)
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    memd = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            memd[attr] = int(v)
+    hlo = compiled.as_text()
+    stats = analyze_module(hlo)
+    rec.update(
+        status="ok",
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        xla_flops_per_device=float(cost.get("flops", 0.0)),
+        xla_bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        hlo_flops_per_device=stats["flops"],
+        hlo_bytes_per_device=stats["bytes"],
+        collective_bytes_per_device=stats["collective_bytes"],
+        collectives=stats["collectives"],
+        memory_analysis=memd,
+        hlo_n_computations=stats["n_computations"],
+    )
+    if keep_hlo:
+        rec["hlo_text_path"] = f"/tmp/hlo_{arch}_{shape_name}_" \
+            f"{'multi' if multi_pod else 'single'}.txt"
+        with open(rec["hlo_text_path"], "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = registry.ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in done:
+                    print(f"[skip-cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     keep_hlo=args.keep_hlo)
+                except Exception as e:  # a failure IS a result: a bug
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec.get("status") == "ok":
+                    print(f"   ok: compile {rec['t_compile_s']}s, "
+                          f"hlo_flops/dev {rec['hlo_flops_per_device']:.3e},"
+                          f" coll {rec['collective_bytes_per_device']:.3e} B,"
+                          f" temp {rec['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f} GiB",
+                          flush=True)
+                else:
+                    print(f"   {rec['status']}: "
+                          f"{rec.get('reason', rec.get('error', ''))[:300]}",
+                          flush=True)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped(spec), {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod = 16×16 = 256 chips (TPU v5e pod);
+multi-pod adds a leading "pod" axis (2 pods = 512 chips). The dry-run
+launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import to build these meshes on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke tests/examples."""
+    n = len(jax.devices())
+    if n >= 2:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Axes used for fully-sharded parameter (and batch) placement."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,89 @@
+"""Training launcher: `python -m repro.launch.train --arch qwen3-14b`.
+
+On this CPU container it trains the arch's reduced (smoke) config on the
+host mesh with synthetic data — the same code path the dry-run lowers for
+the production meshes (pass ``--full`` on a real pod slice to use the
+published dims). Checkpoints use the quorum-commit layer.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import registry
+from ..models.common import param_count
+from ..runtime.checkpoint import restore_sharded, save_sharded
+from ..train.optimizer import OptConfig, choose_optimizer
+from ..train.trainer import make_state, make_train_step
+from .mesh import make_host_mesh
+from .sharding import tree_shardings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (pod-scale only)")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (registry.get(args.arch) if args.full
+           else registry.get_smoke(args.arch))
+    n_params_probe, _ = None, None
+    opt = OptConfig(kind="adamw" if not args.full else
+                    choose_optimizer(1e12), lr=args.lr)
+    state, state_axes = make_state(cfg, opt, key=jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={param_count(state['params']):,d} "
+          f"opt={opt.kind}")
+    mesh = make_host_mesh()
+    s_sh = tree_shardings(mesh, state, state_axes)
+    # no donation here: the freshly-initialized opt state shares zero
+    # buffers (XLA dedupes constants) and double-donation is rejected;
+    # the dry-run path donates (distinct abstract buffers)
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=1,
+                                      global_batch=args.batch))
+    if args.resume:
+        try:
+            state, m = restore_sharded(state, args.ckpt_dir)
+            print(f"resumed from committed step {m['step']}")
+        except (FileNotFoundError, IOError):
+            print("no committed checkpoint; starting fresh")
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    start = int(state["step"])
+    for i in range(start, args.steps):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(
+            k, (args.batch, args.seq), 0, cfg.vocab)}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.random.normal(
+                k, (args.batch, args.seq, cfg.d_model), cfg.dtype)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(args.seq)[None, None],
+                (3, args.batch, args.seq)).astype(jnp.int32)
+            batch["labels"] = batch["tokens"]
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.random.normal(
+                k, (args.batch, cfg.encoder_len, cfg.d_model), cfg.dtype)
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            dt = time.time() - t0
+            print(f"step {i + 1:4d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({dt / max(i + 1 - start, 1):.2f}s/step)")
+        if (i + 1) % args.ckpt_every == 0:
+            man = save_sharded(state, args.ckpt_dir, i + 1)
+            print(f"  ckpt step {i + 1} committed={man['committed']}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

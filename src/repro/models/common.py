@@ -1,0 +1,175 @@
+"""Model configuration + parameter-tree utilities.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every leaf has a
+parallel *logical sharding spec* — a tuple of logical axis names — built by
+the same code paths that build the params (``shape_with_axes``), so specs
+can never drift from shapes. ``repro.launch.sharding`` maps logical axes to
+mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 → d_model // n_heads
+    # attention
+    attn_kind: str = "gqa"         # gqa | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope_sections: tuple = ()     # qwen2-vl M-RoPE (t, h, w) half-dims
+    window: int = -1               # sliding-window size; -1 = full attention
+    global_layers: tuple = ()      # hymba: layer idx with full attention
+    # MLA (deepseek-v3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0        # deepseek: first k layers are dense
+    moe_interleave: int = 1        # llama4: every k-th layer is MoE
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_kind: str = ""             # rwkv6 | mamba
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_len: int = 0           # stub frontend tokens (whisper: 1500)
+    # extras
+    mtp: bool = False              # deepseek multi-token prediction head
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # which shape cells apply (spec: long_500k only for sub-quadratic)
+    supports_long_context: bool = False
+    is_encoder_decoder: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class ShapeCell:
+    """One (arch × input-shape) dry-run cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameter trees with attached logical axes
+# ---------------------------------------------------------------------------
+
+class ParamFactory:
+    """Builds (params, logical_specs) in lockstep.
+
+    ``p(key, shape, axes)`` creates one leaf; axes is a tuple of logical
+    axis names (len == ndim) drawn from:
+      embed, vocab, mlp, moe_mlp, heads, kv_heads, qk, v, q_lora, kv_lora,
+      expert, layers (scan-stack), ssm_in, ssm_state, enc — or None
+      (replicated on that dim).
+    """
+
+    def __init__(self, rngkey, dtype=jnp.bfloat16, abstract: bool = False):
+        self.key = rngkey
+        self.dtype = dtype
+        self.abstract = abstract
+        self.specs: dict = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def leaf(self, shape: tuple, axes: tuple, scale: float = 0.02,
+             zero: bool = False):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype), axes
+        if zero:
+            arr = jnp.zeros(shape, self.dtype)
+        else:
+            arr = (jax.random.normal(self._split(), shape, jnp.float32)
+                   * scale).astype(self.dtype)
+        return arr, axes
+
+    def ones(self, shape: tuple, axes: tuple):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype), axes
+        return jnp.ones(shape, self.dtype), axes
+
+
+def split_tree(tree_with_axes):
+    """{(arr, axes)} nested → (params_tree, axes_tree)."""
+    if isinstance(tree_with_axes, tuple) and len(tree_with_axes) == 2 and \
+            not isinstance(tree_with_axes[0], dict):
+        return tree_with_axes
+    params, axes = {}, {}
+    for k, v in tree_with_axes.items():
+        params[k], axes[k] = split_tree(v)
+    return params, axes
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def stack_layers(pf: ParamFactory, n: int, init_fn):
+    """Build n per-layer trees and stack leaves along a leading "layers"
+    axis (the lax.scan dim). Abstract mode stacks ShapeDtypeStructs."""
+    trees = [init_fn(pf) for _ in range(n)]
+
+    def merge(*nodes):
+        if isinstance(nodes[0], dict):
+            return {k: merge(*[nd[k] for nd in nodes]) for k in nodes[0]}
+        arrs = [nd[0] for nd in nodes]
+        axes = nodes[0][1]
+        if isinstance(arrs[0], jax.ShapeDtypeStruct):
+            stacked = jax.ShapeDtypeStruct((n, *arrs[0].shape),
+                                           arrs[0].dtype)
+        else:
+            stacked = jnp.stack(arrs)
+        return (stacked, ("layers", *axes))
+
+    return merge(*trees)

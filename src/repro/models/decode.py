@@ -1,0 +1,325 @@
+"""Prefill + single-token decode (serve_step) for every architecture.
+
+Cache layout mirrors the segment plan of ``transformer.plan_segments``:
+``{"seg0": <stacked per-layer cache>, ...}`` so the same ``lax.scan``s
+thread (params, cache) → (params, new_cache).
+
+Sliding-window layers (hymba) use a ring-buffer KV cache of length
+``window`` — the reason hymba's ``long_500k`` cell fits: cache bytes are
+O(window), not O(S). Global layers and dense GQA/MLA archs use full-length
+caches. SSM layers cache O(1) recurrent state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .common import ModelConfig
+from .transformer import block_apply, plan_segments, rwkv_block_apply
+
+
+# ---------------------------------------------------------------------------
+# cache specs (ShapeDtypeStructs for the dry-run; zeros for real serving)
+# ---------------------------------------------------------------------------
+
+def _kv_len(seq_len: int, window: int) -> int:
+    return seq_len if window <= 0 else min(window, seq_len)
+
+
+def block_cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+                     window: int) -> dict:
+    spec: dict = {}
+    if cfg.attn_kind == "mla":
+        spec["attn"] = {
+            "c_kv": ((batch, seq_len, cfg.kv_lora_rank), cfg.dtype),
+            "k_rope": ((batch, seq_len, cfg.qk_rope_dim), cfg.dtype)}
+    elif cfg.attn_kind == "gqa":
+        Lkv = _kv_len(seq_len, window)
+        kv = cfg.n_kv_heads * cfg.hd       # flattened for shardability
+        spec["attn"] = {
+            "k": ((batch, Lkv, kv), cfg.dtype),
+            "v": ((batch, Lkv, kv), cfg.dtype)}
+    if cfg.family == "hybrid":
+        spec["ssm"] = ((batch, cfg.d_model, cfg.ssm_state), jnp.float32)
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Full cache pytree spec: {(shape, dtype)} leaves."""
+    segs = plan_segments(cfg)
+    out = {}
+    for i, seg in enumerate(segs):
+        if seg["kind"] == "rwkv":
+            H = cfg.ssm_heads or cfg.n_heads
+            hd = cfg.d_model // H
+            leaf = {"state": ((seg["n"], batch, H * hd, hd), jnp.float32)}
+        elif seg["kind"] == "pair":
+            one = block_cache_spec(cfg, batch, seq_len, seg["window"])
+            leaf = {"dense": _prepend(one, seg["n"]),
+                    "moe": _prepend(block_cache_spec(cfg, batch, seq_len,
+                                                     seg["window"]),
+                                    seg["n"])}
+        elif seg["scanned"]:
+            leaf = _prepend(block_cache_spec(cfg, batch, seq_len,
+                                             seg["window"]), seg["n"])
+        else:
+            leaf = block_cache_spec(cfg, batch, seq_len, seg["window"])
+        out[f"seg{i}"] = leaf
+    if cfg.is_encoder_decoder:
+        kv = cfg.n_kv_heads * cfg.hd
+        out["cross"] = {
+            "k": ((cfg.n_layers, batch, cfg.encoder_len, kv), cfg.dtype),
+            "v": ((cfg.n_layers, batch, cfg.encoder_len, kv), cfg.dtype)}
+    return out
+
+
+def _prepend(spec: dict, n: int) -> dict:
+    if isinstance(spec, tuple):
+        (shape, dt) = spec
+        return ((n, *shape), dt)
+    return {k: _prepend(v, n) for k, v in spec.items()}
+
+
+def cache_zeros(spec) -> Any:
+    if isinstance(spec, tuple):
+        return jnp.zeros(*spec)
+    return {k: cache_zeros(v) for k, v in spec.items()}
+
+
+def cache_abstract(spec) -> Any:
+    if isinstance(spec, tuple):
+        return jax.ShapeDtypeStruct(*spec)
+    return {k: cache_abstract(v) for k, v in spec.items()}
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer GQA decode for sliding-window layers
+# ---------------------------------------------------------------------------
+
+def _gqa_decode_ring(p, cfg: ModelConfig, x, positions, cache, index,
+                     window: int):
+    """Window cache of length W; slot = index mod W; all stored entries are
+    within the window by construction."""
+    W = cache["k"].shape[1]
+    B, S, D = x.shape
+    H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, h)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, K, h)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, K, h)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    slot = jnp.mod(index, W)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.reshape(B, S, K * h), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.reshape(B, S, K * h), slot, axis=1)
+    mask = jnp.arange(W)[None, :] <= jnp.maximum(index, W - 1)  # valid slots
+    out = L.attend(q, ck.reshape(B, W, K, h), cv.reshape(B, W, K, h), mask)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * h), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def block_decode(p, cfg: ModelConfig, x, positions, cache, index, *,
+                 moe: bool, window: int, cross=None, mem_mask=None):
+    """One block, one token. Returns (x, new_cache)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    nc = {}
+    if cfg.attn_kind == "mla":
+        a, c = L.mla_apply(p["attn"], cfg, h, positions,
+                           cache=cache["attn"], cache_index=index)
+        nc["attn"] = c
+    elif cfg.attn_kind == "gqa":
+        W = cache["attn"]["k"].shape[1]
+        full_len = window <= 0 or W > window
+        if full_len:
+            a, c = L.gqa_apply(p["attn"], cfg, h, positions, window=window,
+                               cache=cache["attn"], cache_index=index)
+        else:
+            a, c = _gqa_decode_ring(p["attn"], cfg, h, positions,
+                                    cache["attn"], index, window)
+        nc["attn"] = c
+    else:
+        a = None
+    if cfg.family == "hybrid":
+        m, hstate = S.mamba_decode_step(p["ssm"], cfg, h, cache["ssm"])
+        nc["ssm"] = hstate
+        a = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.norm_eps)
+                   + L.rmsnorm(p["ssm_norm"], m, cfg.norm_eps))
+    x = x + a
+    if cross is not None:   # whisper cross-attention (static encoder cache)
+        hc = L.rmsnorm(cross["ln"], x, cfg.norm_eps)
+        B2, S2 = hc.shape[:2]
+        H2, K2, h2 = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = jnp.einsum("bsd,de->bse", hc, cross["attn"]["wq"]) \
+            .reshape(B2, S2, H2, h2)
+        Te = cross["k"].shape[1]
+        o = L.attend(q, cross["k"].reshape(B2, Te, K2, h2),
+                     cross["v"].reshape(B2, Te, K2, h2),
+                     jnp.ones((S2, Te), jnp.bool_))
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(B2, S2, H2 * h2),
+                           cross["attn"]["wo"])
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        y, _ = L.moe_apply(p["moe"], cfg, h2)
+    else:
+        y = L.mlp_apply(p["mlp"], h2)
+    return x + y, nc
+
+
+# ---------------------------------------------------------------------------
+# serve_step: one new token against a filled cache
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, batch: dict, cache):
+    """batch: {token [B,1] (or embed [B,1,D]), index scalar int32,
+    (positions [3,B,1] for M-RoPE)}. Returns (logits [B,V], new_cache)."""
+    index = batch["index"]
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+        B = x.shape[0]
+    else:
+        x = L.embed_apply(params["embed"], batch["token"])
+        B = batch["token"].shape[0]
+    positions = batch.get(
+        "positions", jnp.broadcast_to(index, (B, 1)).astype(jnp.int32))
+    segs = plan_segments(cfg)
+    new_cache = {}
+    hyb_off = 128 if cfg.family == "hybrid" else 0  # meta-token offset
+    idx_eff = index + hyb_off
+    if cfg.family == "hybrid" and positions.ndim == 2:
+        positions = positions + hyb_off
+    for i, seg in enumerate(segs):
+        c = cache[f"seg{i}"]
+        if seg["kind"] == "rwkv":
+            def body(carry, lc):
+                lp, st = lc
+                y, nc = rwkv_block_apply(lp, cfg, carry, cache=st)
+                return y, nc
+            x, ncs = jax.lax.scan(body, x,
+                                  (params["segments"][f"seg{i}"], c))
+            new_cache[f"seg{i}"] = ncs
+        elif seg["kind"] == "pair":
+            def body(carry, lc):
+                lp, st = lc
+                y, nc1 = block_decode(lp["dense"], cfg, carry, positions,
+                                      st["dense"], idx_eff, moe=False,
+                                      window=seg["window"])
+                y, nc2 = block_decode(lp["moe"], cfg, y, positions,
+                                      st["moe"], idx_eff, moe=True,
+                                      window=seg["window"])
+                return y, {"dense": nc1, "moe": nc2}
+            x, ncs = jax.lax.scan(body, x,
+                                  (params["segments"][f"seg{i}"], c))
+            new_cache[f"seg{i}"] = ncs
+        elif seg["scanned"]:
+            def body(carry, lc, seg=seg):
+                lp, st = lc
+                y, nc = block_decode(lp, cfg, carry, positions, st,
+                                     idx_eff, moe=seg["moe"],
+                                     window=seg["window"])
+                return y, nc
+            x, ncs = jax.lax.scan(body, x,
+                                  (params["segments"][f"seg{i}"], c))
+            new_cache[f"seg{i}"] = ncs
+        else:
+            x, nc = block_decode(params["segments"][f"seg{i}"], cfg, x,
+                                 positions, c, idx_eff, moe=seg["moe"],
+                                 window=seg["window"])
+            new_cache[f"seg{i}"] = nc
+    hidden = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_apply(params["embed"], hidden, cfg.tie_embeddings)
+    return logits[:, 0], new_cache
+
+
+def decode_step_encdec(params, cfg: ModelConfig, batch: dict, cache):
+    """Whisper decoder step: self-attn cache + precomputed cross K/V."""
+    index = batch["index"]
+    x = L.embed_apply(params["embed"], batch["token"])
+    B = x.shape[0]
+    positions = jnp.broadcast_to(index, (B, 1)).astype(jnp.int32)
+    ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+
+    def body(carry, lc):
+        lp, xp, st, k_l, v_l = lc
+        cross = {"ln": xp["ln"], "attn": xp["attn"], "k": k_l, "v": v_l}
+        y, nc = block_decode(lp, cfg, carry, positions, st, index,
+                             moe=False, window=-1, cross=cross)
+        return y, nc
+    x, ncs = jax.lax.scan(body, x, (params["segments"]["seg0"],
+                                    params["cross"], cache["seg0"],
+                                    ck, cv))
+    hidden = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_apply(params["embed"], hidden, cfg.tie_embeddings)
+    return logits[:, 0], {"seg0": ncs, "cross": cache["cross"]}
+
+
+# ---------------------------------------------------------------------------
+# prefill: full forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict,
+            batch_chunks: int = 0):
+    """Returns (last-token logits [B,V], filled cache).
+
+    ``batch_chunks`` > 1 processes the batch in chunks via lax.map —
+    exact (attention/MoE are per-sample at fixed capacity-per-token) and
+    the §Perf iteration that cut deepseek-v3 prefill_32k peak temp: MoE
+    dispatch buffers scale with tokens-in-flight. 0 → auto (4 chunks for
+    global batches ≥ 8)."""
+    from .transformer import backbone_forward, encdec_forward
+
+    ref = batch.get("tokens", batch.get("embeds"))
+    B = ref.shape[0]
+    if batch_chunks == 0:
+        batch_chunks = 8 if B >= 16 else (4 if B >= 8 else 1)
+    if batch_chunks > 1 and B % batch_chunks == 0:
+        def split(x):
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] == B:
+                m = jnp.moveaxis(x, 1, 0)
+                m = m.reshape(batch_chunks, B // batch_chunks,
+                              *m.shape[1:])
+                return jnp.moveaxis(m, 1, 1)  # [nch, b, 3→? keep]
+            return x.reshape(batch_chunks, B // batch_chunks,
+                             *x.shape[1:])
+        subs = {k: split(v) for k, v in batch.items()}
+
+        def one(sub):
+            if "positions" in sub and sub["positions"].ndim == 3                     and sub["positions"].shape[0] != 3:
+                sub = dict(sub)
+                sub["positions"] = jnp.moveaxis(sub["positions"], 0, 1)
+            return prefill(params, cfg, sub, batch_chunks=1)[0]
+        logits = jax.lax.map(one, subs)
+        return logits.reshape(B, -1), None
+
+    if cfg.is_encoder_decoder:
+        hidden, _mem = encdec_forward(params, cfg, batch["frames"],
+                                      batch["tokens"])
+        logits = L.logits_apply(params["embed"], hidden[:, -1:],
+                                cfg.tie_embeddings)
+        return logits[:, 0], None
+
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+        B, Sq = x.shape[:2]
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        B, Sq = batch["tokens"].shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    hidden, _ = backbone_forward(params, cfg, x, positions)
+    logits = L.logits_apply(params["embed"], hidden[:, -1:],
+                            cfg.tie_embeddings)
+    # NOTE: backbone_forward does not thread caches; serving re-lowers a
+    # cache-filling variant. For the dry-run cells, `prefill` lowers the
+    # full-sequence forward (the compute that dominates prefill); cache
+    # write-out is measured by the decode cells.
+    return logits[:, 0], None

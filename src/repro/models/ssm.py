@@ -1,0 +1,266 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba-style SSM.
+
+RWKV6 time-mix (arXiv:2404.05892) with data-dependent decay:
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t          (state: [h_k, h_v] per head)
+    o_t = r_t · (diag(u ⊙ k_t) v_t + S_{t-1})
+Training uses the *chunked* parallel form (log-space cumulative decays +
+three matmuls per chunk) — MXU-friendly; ``repro.kernels.rwkv6_scan`` is
+the fused Pallas version, this module is its jnp reference. Decode is the
+O(1) recurrent update (the reason rwkv6-3b runs the ``long_500k`` cell).
+
+Mamba head (hymba-1.5b, arXiv:2411.13676): diagonal selective SSM
+    h_t = exp(Δ_t ⊙ A) h_{t-1} + Δ_t B_t x_t ;  y_t = C_t · h_t + D x_t
+implemented as a lax.scan over time for training/prefill (a chunked
+reformulation is a recorded §Perf candidate) and an O(1) update for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, ParamFactory
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(pf: ParamFactory, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    h = D // H
+    return {
+        "w_r": pf.leaf((D, H * h), ("embed", "heads")),
+        "w_k": pf.leaf((D, H * h), ("embed", "heads")),
+        "w_v": pf.leaf((D, H * h), ("embed", "heads")),
+        "w_g": pf.leaf((D, H * h), ("embed", "heads")),
+        # data-dependent decay projection (lora-style, simplified: direct)
+        "w_w": pf.leaf((D, H * h), ("embed", "heads"), scale=0.006),
+        "decay_base": pf.leaf((H * h,), ("heads",), zero=True),
+        "bonus_u": pf.leaf((H * h,), ("heads",), zero=True),
+        "w_o": pf.leaf((H * h, D), ("heads", "embed")),
+        "ln_x": {"scale": pf.ones((D,), (None,))},
+    }
+
+
+def _rwkv6_project(p, x, H: int):
+    """All full-width tensors stay in x.dtype (full-width f32 intermediates
+    were being saved across the layer scan by the XLA rematerializer — a
+    2× residual-stack memory tax). The decay raw projection is returned in
+    x.dtype; callers convert per-chunk/per-step in f32."""
+    B, S, D = x.shape
+    h = p["w_r"].shape[1] // H
+    def proj(w):
+        return jnp.einsum("bsd,de->bse", x, w).reshape(B, S, H, h)
+    r, k, v = proj(p["w_r"]), proj(p["w_k"]), proj(p["w_v"])
+    g = jax.nn.silu(proj(p["w_g"]))
+    w_raw = proj(p["w_w"])
+    return r, k, v, g, w_raw
+
+
+def _decay_log(p, w_raw, H: int):
+    """w_raw [..., H, h] → log-decay in f32 (numerically sensitive)."""
+    h = w_raw.shape[-1]
+    return -jax.nn.softplus(
+        w_raw.astype(jnp.float32)
+        + p["decay_base"].reshape(H, h).astype(jnp.float32)) - 1e-4
+
+
+def rwkv6_chunked(p, cfg: ModelConfig, x, chunk: int = 128):
+    """Parallel chunked WKV6. x: [B,S,D] → [B,S,D]. S % chunk == 0."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    H = cfg.ssm_heads or cfg.n_heads
+    hd = D // H
+    r, k, v, g, w_raw = _rwkv6_project(p, x, H)
+    u = p["bonus_u"].reshape(H, hd).astype(jnp.float32)
+    NC = S // chunk
+    # reshape to chunks: [B, NC, C, H, hd] → scan over NC
+    def to_chunks(t):
+        return t.reshape(B, NC, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w_raw))  # [NC,B,H,C,hd]
+
+    def chunk_step(S0, inp):
+        rr, kk, vv, wraw = inp                        # [B,H,C,hd]
+        rr = rr.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vv = vv.astype(jnp.float32)
+        # [B,H,C,hd] → per-chunk f32 decay (small; full-width stays bf16)
+        ww = _decay_log(p, wraw.transpose(0, 2, 1, 3), H) \
+            .transpose(0, 2, 1, 3)
+        cum = jnp.cumsum(ww, axis=2)                  # inclusive cum log-decay
+        cum_ex = cum - ww                             # exclusive
+        total = cum[:, :, -1:, :]                     # [B,H,1,hd]
+        # intra-chunk: A[t,s] = r_t·(exp(cum_ex_t - cum_s) ⊙ k_s), s < t
+        q_dec = rr * jnp.exp(cum_ex)                  # [B,H,C,hd]
+        k_dec = kk * jnp.exp(-cum)
+        att = jnp.einsum("bhtk,bhsk->bhts", q_dec, k_dec)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        # bonus diagonal term: r_t · (u ⊙ k_t)
+        diag = jnp.einsum("bhtk,bhtk->bht", rr, u[None, :, None, :] * kk)
+        intra = (jnp.einsum("bhts,bhsv->bhtv", att, vv)
+                 + diag[..., None] * vv)
+        # inter-chunk: r_t exp(cum_ex_t) · S0
+        inter = jnp.einsum("bhtk,bhkv->bhtv", q_dec, S0)
+        # state update: S1 = exp(total) S0 + Σ_s exp(total - cum_s) k_s ⊗ v_s
+        S1 = (jnp.exp(total).transpose(0, 1, 3, 2) * S0
+              + jnp.einsum("bhsk,bhsv->bhkv",
+                           kk * jnp.exp(total - cum), vv))
+        return S1, (intra + inter)
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, outs = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)  # [B,S,H,hd]
+    out = out.astype(x.dtype) * g
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), p["w_o"])
+    return y
+
+
+def rwkv6_decode_step(p, cfg: ModelConfig, x, state):
+    """x: [B,1,D]; state: [B,H,hd,hd] f32. O(1) per token."""
+    B, _, D = x.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    hd = D // H
+    r, k, v, g, w_raw = _rwkv6_project(p, x, H)
+    r = r[:, 0].astype(jnp.float32)                   # [B,H,hd]
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    w = jnp.exp(_decay_log(p, w_raw[:, 0], H))        # [B,H,hd]
+    u = p["bonus_u"].reshape(H, hd).astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = state * w[..., None] + kv
+    out = (out[:, None].astype(x.dtype)
+           .reshape(B, 1, H, hd) * g)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, H * hd), p["w_o"])
+    return y, state
+
+
+def rwkv6_state_spec(cfg: ModelConfig, batch: int):
+    H = cfg.ssm_heads or cfg.n_heads
+    hd = cfg.d_model // H
+    return ((batch, H, hd, hd), jnp.float32)
+
+
+def rwkv6_sequential_oracle(p, cfg: ModelConfig, x):
+    """Token-by-token reference for tests (slow, exact)."""
+    B, S, D = x.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    hd = D // H
+    state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = rwkv6_decode_step(p, cfg, x[:, t:t + 1], state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# channel mix (rwkv6 ffn)
+# ---------------------------------------------------------------------------
+
+def init_channel_mix(pf: ParamFactory, d: int, f: int):
+    return {
+        "w_k": pf.leaf((d, f), ("embed", "mlp")),
+        "w_v": pf.leaf((f, d), ("mlp", "embed")),
+        "w_r": pf.leaf((d, d), ("embed", None)),
+    }
+
+
+def channel_mix(p, x):
+    kk = jnp.einsum("bsd,df->bsf", x, p["w_k"])
+    kk = jnp.square(jax.nn.relu(kk))               # gate math in x.dtype
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_r"]))
+    return rr * vv
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style diagonal selective SSM (hymba heads)
+# ---------------------------------------------------------------------------
+
+def init_mamba(pf: ParamFactory, cfg: ModelConfig, d_inner: int):
+    N = cfg.ssm_state
+    return {
+        "w_in": pf.leaf((cfg.d_model, d_inner), ("embed", "heads")),
+        "w_gate": pf.leaf((cfg.d_model, d_inner), ("embed", "heads")),
+        "w_B": pf.leaf((d_inner, N), ("heads", None), scale=0.01),
+        "w_C": pf.leaf((d_inner, N), ("heads", None), scale=0.01),
+        "w_dt": pf.leaf((d_inner,), ("heads",), zero=True),
+        "A_log": pf.leaf((d_inner, N), ("heads", None), zero=True),
+        "Dskip": pf.ones((d_inner,), ("heads",)),
+        "w_out": pf.leaf((d_inner, cfg.d_model), ("heads", "embed")),
+    }
+
+
+def _mamba_project(p, x):
+    xi = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))\
+        .astype(jnp.float32)
+    xf = xi.astype(jnp.float32)
+    B_ = jnp.einsum("bse,en->bsn", xf, p["w_B"].astype(jnp.float32))
+    C_ = jnp.einsum("bse,en->bsn", xf, p["w_C"].astype(jnp.float32))
+    dt = jax.nn.softplus(xf * p["w_dt"].astype(jnp.float32))   # [B,S,e]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [e,N] < 0
+    return xf, z, B_, C_, dt, A
+
+
+def mamba_scan(p, cfg: ModelConfig, x, chunk: int = 128):
+    """Training/prefill path. Nested scan: outer over S/chunk chunks
+    (checkpointed — only per-chunk [B,e,N] carries are saved), inner over
+    tokens within the chunk (recomputed in the backward). The flat
+    per-token scan saved 4096 × [B,e,N] f32 carries per layer — 6.7 GiB/
+    layer/device on hymba train_4k (measured 239 GiB total); chunking
+    drops that to S/chunk carries (52 MiB/layer)."""
+    Bsz, S, D = x.shape
+    xf, z, B_, C_, dt, A = _mamba_project(p, x)
+    e = xf.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    NC = S // chunk
+
+    def token_step(h, inp):
+        xt, bt, ct, dtt = inp                          # [B,e],[B,N],[B,N],[B,e]
+        decay = jnp.exp(dtt[..., None] * A[None])      # [B,e,N]
+        h = h * decay + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, ct)
+        return h, y
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dc = inp                           # [C,B,·]
+        h, ys = jax.lax.scan(token_step, h, (xc, bc, cc, dc))
+        return h, ys
+
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def to_chunks(t):                                  # [B,S,·] → [NC,C,B,·]
+        return t.transpose(1, 0, 2).reshape(NC, chunk, Bsz, t.shape[-1])
+    xs = tuple(map(to_chunks, (xf, B_, C_, dt)))
+    h0 = jnp.zeros((Bsz, e, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xs)           # [NC,C,B,e]
+    y = ys.reshape(S, Bsz, e).transpose(1, 0, 2) \
+        + xf * p["Dskip"].astype(jnp.float32)
+    y = (y * z).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+def mamba_decode_step(p, cfg: ModelConfig, x, h):
+    """x: [B,1,D], h: [B, d_inner, N] f32."""
+    xf, z, B_, C_, dt, A = _mamba_project(p, x)
+    xt, bt, ct, dtt = xf[:, 0], B_[:, 0], C_[:, 0], dt[:, 0]
+    decay = jnp.exp(dtt[..., None] * A[None])
+    h = h * decay + (dtt * xt)[..., None] * bt[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, ct)
+    y = y + xt * p["Dskip"].astype(jnp.float32)
+    y = (y * z[:, 0]).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["w_out"])[:, None], h
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int, d_inner: int):
+    return ((batch, d_inner, cfg.ssm_state), jnp.float32)

@@ -1,0 +1,448 @@
+"""Unified LM assembly for all 10 assigned architectures.
+
+One parameter/init/forward family covers:
+  * dense GQA stacks (qwen3, internlm2, yi-34b, yi-6b, qwen2-vl backbone)
+  * deepseek-v3: MLA attention, dense prefix + MoE stack, MTP head
+  * llama4-maverick: alternating dense/MoE layers (moe_interleave=2)
+  * hymba: parallel attention+Mamba heads, SWA + 3 global layers,
+    meta tokens
+  * rwkv6: attention-free time-mix/channel-mix stack
+  * whisper: encoder-decoder (audio frontend stubbed to frame embeddings)
+
+Layer stacks are ``lax.scan``-ed over stacked parameter trees (bounded HLO
+size and compile time at 61 layers), with ``jax.checkpoint`` on the block
+body (remat). Non-uniform stacks (deepseek dense prefix, llama4 pairs,
+hymba global layers) are partitioned into homogeneous scanned segments.
+
+Decode paths thread a per-layer cache pytree through the same scans.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .common import ModelConfig, ParamFactory, split_tree, stack_layers
+from .pconstraint import constrain_batch
+
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_block(pf: ParamFactory, cfg: ModelConfig, *, moe: bool):
+    p = {"ln1": {"scale": pf.ones((cfg.d_model,), (None,))},
+         "ln2": {"scale": pf.ones((cfg.d_model,), (None,))}}
+    if cfg.attn_kind == "mla":
+        p["attn"] = L.init_mla(pf, cfg)
+    elif cfg.attn_kind == "gqa":
+        p["attn"] = L.init_gqa(pf, cfg)
+    if cfg.family == "hybrid":
+        p["ssm"] = S.init_mamba(pf, cfg, d_inner=cfg.d_model)
+        p["ssm_norm"] = {"scale": pf.ones((cfg.d_model,), (None,))}
+        p["attn_norm"] = {"scale": pf.ones((cfg.d_model,), (None,))}
+    if moe:
+        p["moe"] = L.init_moe(pf, cfg)
+    else:
+        p["mlp"] = L.init_mlp(pf, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, x, positions, *, moe: bool,
+                window: int, cache=None, cache_index=None, causal=True):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = {}
+    if cfg.attn_kind == "mla":
+        a, nc = L.mla_apply(p["attn"], cfg, h, positions,
+                            cache=None if cache is None else cache["attn"],
+                            cache_index=cache_index)
+        if nc is not None:
+            new_cache["attn"] = nc
+    elif cfg.attn_kind == "gqa":
+        a, nc = _gqa_maybe_noncausal(p["attn"], cfg, h, positions,
+                                     window=window, cache=cache,
+                                     cache_index=cache_index, causal=causal)
+        if nc is not None:
+            new_cache["attn"] = nc
+    else:
+        a = None
+    if cfg.family == "hybrid":
+        # hymba: attention and mamba heads run in PARALLEL on the same
+        # input; outputs are normalized then averaged (paper eq. 3)
+        if cache is None:
+            m = S.mamba_scan(p["ssm"], cfg, h)
+        else:
+            m, hstate = S.mamba_decode_step(p["ssm"], cfg, h, cache["ssm"])
+            new_cache["ssm"] = hstate
+        a = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.norm_eps)
+                   + L.rmsnorm(p["ssm_norm"], m, cfg.norm_eps))
+    x = x + a
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if moe:
+        y, aux = L.moe_apply(p["moe"], cfg, h2)
+    else:
+        y = L.mlp_apply(p["mlp"], h2)
+    return x + y, (new_cache if new_cache else None), aux
+
+
+def _gqa_maybe_noncausal(p, cfg, h, positions, *, window, cache,
+                         cache_index, causal):
+    if causal:
+        return L.gqa_apply(p, cfg, h, positions, window=window,
+                           cache=None if cache is None else cache["attn"],
+                           cache_index=cache_index)
+    # bidirectional (whisper encoder): full visibility
+    B, Sq, D = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", h, p["wq"]).reshape(B, Sq, H, hd)
+    k = jnp.einsum("bsd,de->bse", h, p["wk"]).reshape(B, Sq, K, hd)
+    v = jnp.einsum("bsd,de->bse", h, p["wv"]).reshape(B, Sq, K, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    mask = jnp.ones((Sq, Sq), jnp.bool_)
+    out = L.attend(q, k, v, mask)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, Sq, H * hd),
+                      p["wo"]), None
+
+
+# rwkv6 block -----------------------------------------------------------------
+
+def init_rwkv_block(pf: ParamFactory, cfg: ModelConfig):
+    return {"ln1": {"scale": pf.ones((cfg.d_model,), (None,))},
+            "ln2": {"scale": pf.ones((cfg.d_model,), (None,))},
+            "tmix": S.init_rwkv6(pf, cfg),
+            "cmix": S.init_channel_mix(pf, cfg.d_model, cfg.d_ff)}
+
+
+def rwkv_block_apply(p, cfg, x, *, cache=None):
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cache is None:
+        y = S.rwkv6_chunked(p["tmix"], cfg, h)
+        nc = None
+    else:
+        # cache leaf is flattened [B, H*hd, hd] at the jit boundary
+        H = cfg.ssm_heads or cfg.n_heads
+        hd = cfg.d_model // H
+        B = h.shape[0]
+        st_in = cache["state"].reshape(B, H, hd, hd)
+        y, st = S.rwkv6_decode_step(p["tmix"], cfg, h, st_in)
+        nc = {"state": st.reshape(B, H * hd, hd)}
+    x = x + y
+    x = x + S.channel_mix(p["cmix"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# stack partitioning: homogeneous scanned segments
+# ---------------------------------------------------------------------------
+
+def plan_segments(cfg: ModelConfig) -> list[dict]:
+    """Layer plan → list of segments, each {kind, n, moe, window, scanned}."""
+    segs = []
+    if cfg.family == "ssm":
+        return [{"kind": "rwkv", "n": cfg.n_layers, "scanned": True}]
+    if cfg.family == "hybrid":
+        # hymba: global (full) attention on first/middle/last layer
+        glb = set(cfg.global_layers or
+                  (0, cfg.n_layers // 2, cfg.n_layers - 1))
+        i = 0
+        while i < cfg.n_layers:
+            if i in glb:
+                segs.append({"kind": "block", "n": 1, "moe": False,
+                             "window": -1, "scanned": False})
+                i += 1
+            else:
+                j = i
+                while j < cfg.n_layers and j not in glb:
+                    j += 1
+                segs.append({"kind": "block", "n": j - i, "moe": False,
+                             "window": cfg.window, "scanned": True})
+                i = j
+        return segs
+    if cfg.n_experts and cfg.moe_interleave > 1:
+        # llama4: every moe_interleave-th layer is MoE → scan over pairs
+        assert cfg.n_layers % cfg.moe_interleave == 0
+        segs.append({"kind": "pair", "n": cfg.n_layers // cfg.moe_interleave,
+                     "moe": True, "window": cfg.window, "scanned": True})
+        return segs
+    if cfg.n_experts:
+        if cfg.n_dense_layers:
+            segs.append({"kind": "block", "n": cfg.n_dense_layers,
+                         "moe": False, "window": cfg.window, "scanned": True})
+        segs.append({"kind": "block",
+                     "n": cfg.n_layers - cfg.n_dense_layers, "moe": True,
+                     "window": cfg.window, "scanned": True})
+        return segs
+    segs.append({"kind": "block", "n": cfg.n_layers, "moe": False,
+                 "window": cfg.window, "scanned": True})
+    return segs
+
+
+def init_segment(pf: ParamFactory, cfg: ModelConfig, seg: dict):
+    if seg["kind"] == "rwkv":
+        return stack_layers(pf, seg["n"],
+                            lambda f: init_rwkv_block(f, cfg))
+    if seg["kind"] == "pair":
+        def one(f):
+            return {"dense": init_block(f, cfg, moe=False),
+                    "moe": init_block(f, cfg, moe=True)}
+        return stack_layers(pf, seg["n"], one)
+    if seg["scanned"]:
+        return stack_layers(pf, seg["n"],
+                            lambda f: init_block(f, cfg, moe=seg["moe"]))
+    return init_block(pf, cfg, moe=seg["moe"])
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key, abstract: bool = False):
+    """Returns (params, logical_axes) trees."""
+    pf = ParamFactory(key, dtype=cfg.dtype, abstract=abstract)
+    tree: dict = {"embed": L.init_embed(pf, cfg),
+                  "ln_f": {"scale": pf.ones((cfg.d_model,), (None,))}}
+    segs = plan_segments(cfg)
+    tree["segments"] = {f"seg{i}": init_segment(pf, cfg, s)
+                        for i, s in enumerate(segs)}
+    if cfg.family == "hybrid":
+        tree["meta_tokens"] = pf.leaf((128, cfg.d_model), (None, "embed"))
+    if cfg.mtp:
+        tree["mtp"] = {"proj": pf.leaf((2 * cfg.d_model, cfg.d_model),
+                                       ("embed", None)),
+                       "block": init_block(pf, cfg, moe=False),
+                       "ln": {"scale": pf.ones((cfg.d_model,), (None,))}}
+    if cfg.is_encoder_decoder:
+        tree["encoder"] = {
+            "blocks": stack_layers(
+                pf, cfg.encoder_layers,
+                lambda f: init_block(f, cfg, moe=False)),
+            "ln": {"scale": pf.ones((cfg.d_model,), (None,))},
+        }
+        tree["cross"] = stack_layers(
+            pf, cfg.n_layers, lambda f: {
+                "ln": {"scale": f.ones((cfg.d_model,), (None,))},
+                "attn": L.init_gqa(f, cfg)})
+    return split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _segment_forward(params_seg, cfg: ModelConfig, seg: dict, x, positions):
+    """Full-sequence forward through one segment. Returns (x, aux)."""
+    if seg["kind"] == "rwkv":
+        def body(carry, lp):
+            y, _ = rwkv_block_apply(lp, cfg, carry)
+            return y, jnp.zeros((), jnp.float32)
+        body = jax.checkpoint(body, policy=REMAT_POLICY)
+        x, _ = jax.lax.scan(body, x, params_seg)
+        return x, jnp.zeros((), jnp.float32)
+    if seg["kind"] == "pair":
+        def body(carry, lp):
+            y, _, _ = block_apply(lp["dense"], cfg, carry, positions,
+                                  moe=False, window=seg["window"])
+            y, _, aux = block_apply(lp["moe"], cfg, y, positions,
+                                    moe=True, window=seg["window"])
+            return y, aux
+        body = jax.checkpoint(body, policy=REMAT_POLICY)
+        x, auxs = jax.lax.scan(body, x, params_seg)
+        return x, jnp.sum(auxs)
+    if seg["scanned"]:
+        def body(carry, lp):
+            y, _, aux = block_apply(lp, cfg, carry, positions,
+                                    moe=seg["moe"], window=seg["window"])
+            return y, aux
+        body = jax.checkpoint(body, policy=REMAT_POLICY)
+        x, auxs = jax.lax.scan(body, x, params_seg)
+        return x, jnp.sum(auxs)
+    y, _, aux = block_apply(params_seg, cfg, x, positions,
+                            moe=seg["moe"], window=seg["window"])
+    return y, aux
+
+
+def backbone_forward(params, cfg: ModelConfig, x, positions):
+    """x: [B,S,D] (post-embedding). Returns (hidden, total_aux)."""
+    segs = plan_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, seg in enumerate(segs):
+        x, aux = _segment_forward(params["segments"][f"seg{i}"], cfg, seg,
+                                  x, positions)
+        aux_total = aux_total + aux
+    return L.rmsnorm(params["ln_f"], x, cfg.norm_eps), aux_total
+
+
+def encoder_forward(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings [B, T_enc, D]."""
+    B, T, D = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = frames.astype(cfg.dtype)
+
+    def body(carry, lp):
+        y, _, _ = block_apply(lp, cfg, carry, positions, moe=False,
+                              window=-1, causal=False)
+        return y, None
+    body = jax.checkpoint(body, policy=REMAT_POLICY)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return L.rmsnorm(params["encoder"]["ln"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens):
+    """Whisper train forward: returns decoder hidden states."""
+    B, Sd = tokens.shape
+    mem = encoder_forward(params, cfg, frames)
+    x = L.embed_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+    mem_pos = jnp.broadcast_to(jnp.arange(mem.shape[1])[None],
+                               (B, mem.shape[1]))
+    seg = plan_segments(cfg)[0]
+
+    def body(carry, lp):
+        blk, xp = lp
+        y, _, _ = block_apply(blk, cfg, carry, positions, moe=False,
+                              window=-1)
+        # cross-attention to encoder memory
+        h = L.rmsnorm(xp["ln"], y, cfg.norm_eps)
+        Bq, Sq = h.shape[:2]
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        Te = mem.shape[1]
+        q = jnp.einsum("bsd,de->bse", h, xp["attn"]["wq"]) \
+            .reshape(Bq, Sq, H, hd)
+        k = jnp.einsum("bsd,de->bse", mem, xp["attn"]["wk"]) \
+            .reshape(Bq, Te, K, hd)
+        v = jnp.einsum("bsd,de->bse", mem, xp["attn"]["wv"]) \
+            .reshape(Bq, Te, K, hd)
+        mask = jnp.ones((Sq, Te), jnp.bool_)
+        o = L.attend(q, k, v, mask)
+        y = y + jnp.einsum("bse,ed->bsd", o.reshape(Bq, Sq, H * hd),
+                           xp["attn"]["wo"])
+        return y, None
+    body = jax.checkpoint(body, policy=REMAT_POLICY)
+    x, _ = jax.lax.scan(body, x, (params["segments"]["seg0"],
+                                  params["cross"]))
+    return L.rmsnorm(params["ln_f"], x, cfg.norm_eps), mem
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits, targets, weights=None):
+    """logits [B,S,V] (any float dtype), targets int [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if weights is None:
+        return jnp.mean(nll)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.clip(jnp.sum(w), 1.0)
+
+
+def ce_loss_seqchunk(embed_params, hidden, targets, tie: bool,
+                     weights=None, shift: int = 1, chunk: int = 512):
+    """Sequence-chunked next-token CE: the [B,S,V] logits tensor is never
+    materialized — each lax.scan step computes one [B,chunk,V] slice and
+    reduces it (jax.checkpoint → the backward recomputes per chunk). This
+    is what keeps 64Ki-token × 100k+-vocab train cells inside HBM (the
+    unchunked f32 logits alone would be tens of GiB per device).
+
+    ``shift``: predict token t+shift (1 = next-token LM, 2 = MTP head)."""
+    B, S, D = hidden.shape
+    pad = jnp.zeros((B, shift), targets.dtype)
+    tgt = jnp.concatenate([targets[:, shift:], pad], axis=1)
+    w = jnp.concatenate(
+        [jnp.ones((B, S - shift), jnp.float32),
+         jnp.zeros((B, shift), jnp.float32)], axis=1)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    if S % chunk != 0:
+        chunk = S                      # fall back to unchunked
+    n = S // chunk
+    hid = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    tgc = jnp.moveaxis(tgt.reshape(B, n, chunk), 1, 0)
+    wc = jnp.moveaxis(w.reshape(B, n, chunk), 1, 0)
+
+    def body(carry, xs):
+        h_c, t_c, w_c = xs
+        logits = L.logits_apply(embed_params, h_c, tie) \
+            .astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None],
+                                   axis=-1)[..., 0]
+        nll = (lse - gold) * w_c
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(w_c)), None
+
+    body = jax.checkpoint(body, policy=REMAT_POLICY)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hid, tgc, wc))
+    return tot / jnp.clip(cnt, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict):
+    """Next-token loss. batch: tokens [B,S] (+ optional embeds/positions/
+    frames for vlm/audio). Returns (loss, metrics)."""
+    if cfg.is_encoder_decoder:
+        hidden, _ = encdec_forward(params, cfg, batch["frames"],
+                                   batch["tokens"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        if "embeds" in batch:                     # vlm stub frontend
+            x = batch["embeds"].astype(cfg.dtype)
+            B, Sq = x.shape[:2]
+        else:
+            x = L.embed_apply(params["embed"], batch["tokens"])
+            B, Sq = batch["tokens"].shape
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+        if cfg.family == "hybrid":                # hymba meta tokens
+            meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                    (B, *params["meta_tokens"].shape))
+            x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+            if positions.ndim == 2:
+                positions = jnp.concatenate(
+                    [jnp.zeros((B, 128), positions.dtype), positions + 128],
+                    axis=1)
+        hidden, aux = backbone_forward(params, cfg, x, positions)
+        if cfg.family == "hybrid":
+            hidden = hidden[:, 128:]
+    targets = batch.get("labels", batch["tokens"])
+    loss = ce_loss_seqchunk(params["embed"], hidden, targets,
+                            cfg.tie_embeddings,
+                            weights=batch.get("loss_weights"), shift=1)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp:   # deepseek multi-token prediction: predict t+2
+        B2, S2 = hidden.shape[:2]
+        # next-token embedding stream, padded to full length S
+        nxt = jnp.concatenate(
+            [targets[:, 1:], jnp.zeros((B2, 1), targets.dtype)], axis=1)
+        emb_next = L.embed_apply(params["embed"], nxt)
+        h_in = jnp.concatenate(
+            [L.rmsnorm(params["mtp"]["ln"], hidden, cfg.norm_eps),
+             emb_next], axis=-1)
+        h_in = jnp.einsum("bsd,de->bse", h_in, params["mtp"]["proj"])
+        pos2 = jnp.broadcast_to(jnp.arange(S2)[None], (B2, S2))
+        h2, _, _ = block_apply(params["mtp"]["block"], cfg, h_in, pos2,
+                               moe=False, window=cfg.window)
+        mtp_loss = ce_loss_seqchunk(params["embed"], h2, targets,
+                                    cfg.tie_embeddings, shift=2)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    loss = loss + 0.01 * aux
+    return loss, metrics

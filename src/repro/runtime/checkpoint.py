@@ -1,0 +1,127 @@
+"""Sharded checkpointing with HT-Paxos-style quorum commit.
+
+Layout: ``<dir>/step_<n>/shard_<k>.npz`` + ``manifest_<n>.json``. A
+checkpoint is COMMITTED only when a majority of shard replicas acked their
+write — mirroring the dissemination-layer stability rule (§4.1: an id
+enters ``stable_ids`` only when a majority of disseminators hold the
+payload, guaranteeing f+1 durable copies). Restore scans for the newest
+*committed* manifest and ignores torn/uncommitted saves, which is exactly
+the crash-restart story of the paper's stable-storage model (§3).
+
+Shards are produced by flattening the param tree and range-partitioning
+leaves round-robin across ``n_shards`` — on a real pod each host writes
+its own FSDP shard; here the shard files stand in for per-host storage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .statemachine import tree_digest
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save_sharded(state, directory: str, step: int, n_shards: int = 4,
+                 fail_shards: set | None = None) -> dict:
+    """Write shards with replication factor 2: shard k is written by node
+    k (replica 0) and node (k+1) mod n (replica 1) — the dissemination-
+    layer rule that a payload must exist at multiple nodes before its id
+    can stabilize. ``fail_shards`` = failed NODES (fault injection): a
+    dead node writes neither its primary shard nor its backup copy.
+
+    Commit requires (a) a majority of node acks AND (b) every shard
+    surviving on ≥1 replica — committed ⇒ restorable."""
+    fail_shards = fail_shards or set()
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves, _ = _flatten(state)
+    shard_replicas: dict[int, list[int]] = {k: [] for k in range(n_shards)}
+    node_acks = []
+    for node in range(n_shards):
+        if node in fail_shards:
+            continue
+        node_acks.append(node)
+        for rep, k in ((0, node), (1, (node - 1) % n_shards)):
+            part = {str(i): np.asarray(l) for i, l in enumerate(leaves)
+                    if i % n_shards == k}
+            np.savez(os.path.join(d, f"shard_{k}_rep{rep}.npz"), **part)
+            shard_replicas[k].append(rep)
+    majority = n_shards // 2 + 1
+    committed = (len(node_acks) >= majority
+                 and all(len(v) >= 1 for v in shard_replicas.values()))
+    manifest = {
+        "step": step,
+        "n_shards": n_shards,
+        "n_leaves": len(leaves),
+        "acked_nodes": node_acks,
+        "shard_replicas": {str(k): v for k, v in shard_replicas.items()},
+        "committed": committed,
+        "digest": tree_digest(state["params"]) if "params" in state
+        else tree_digest(state),
+        "time": time.time(),
+    }
+    # the commit record itself is the paper's "decided" marker: written
+    # only after the ack quorum is in
+    if manifest["committed"]:
+        with open(os.path.join(directory, f"manifest_{step:08d}.json"),
+                  "w") as f:
+            json.dump(manifest, f)
+    return manifest
+
+
+def latest_committed_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("manifest_") and name.endswith(".json"):
+            with open(os.path.join(directory, name)) as f:
+                m = json.load(f)
+            if m.get("committed"):
+                steps.append(m["step"])
+    return max(steps) if steps else None
+
+
+def restore_sharded(template_state, directory: str,
+                    step: Optional[int] = None):
+    """Rebuild state from the newest committed checkpoint, reading any
+    surviving replica per shard (commit guarantees ≥1 exists)."""
+    if step is None:
+        step = latest_committed_step(directory)
+        if step is None:
+            raise FileNotFoundError("no committed checkpoint")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(directory, f"manifest_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(template_state)
+    found: dict[int, np.ndarray] = {}
+    for k_str, reps in manifest["shard_replicas"].items():
+        for rep in reps:
+            path = os.path.join(d, f"shard_{k_str}_rep{rep}.npz")
+            if not os.path.exists(path):
+                continue
+            with np.load(path) as z:
+                for key in z.files:
+                    found[int(key)] = z[key]
+            break   # one surviving replica per shard is enough
+    if len(found) != len(leaves):
+        raise IOError(f"checkpoint step {step} incomplete: "
+                      f"{len(found)}/{len(leaves)} leaves")
+
+    def revive(raw: np.ndarray, like) -> jax.Array:
+        # np.savez stores bfloat16 as void ("|V2"); view it back
+        if raw.dtype.kind == "V":
+            raw = raw.view(np.dtype(like.dtype))
+        return jax.numpy.asarray(raw).astype(like.dtype).reshape(like.shape)
+
+    new_leaves = [revive(found[i], l) for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, new_leaves), manifest

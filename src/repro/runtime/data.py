@@ -1,0 +1,90 @@
+"""Exactly-once, totally-ordered data pipeline over the HT-Paxos log.
+
+Ingest frontends (the paper's clients) submit batch *metadata*; payloads
+are replicated by the dissemination layer (f+1 copies before ordering —
+§4.1 stability); the ordering layer fixes the global consumption order.
+Every pod consumes the same batch sequence exactly once, across retries,
+duplicate submissions, and pod restarts — the training-data analogue of
+"agents discard duplicate messages / learners discard duplicate
+proposals" (§3).
+
+``ShardedBatchSource`` is the deterministic synthetic-data generator used
+by the examples and the dry-run driver: batch content is a pure function
+of (seed, batch_id), so a restarted pod regenerates byte-identical
+payloads — the in-process stand-in for re-fetching a replicated payload.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ShardedBatchSource:
+    """Deterministic batch stream: content = f(seed, index)."""
+    vocab: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    d_model: int = 0          # for stub-frontend archs (vlm/audio)
+    family: str = "dense"
+    encoder_len: int = 0
+
+    def batch(self, index: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), index)
+        out = {"tokens": jax.random.randint(
+            key, (self.global_batch, self.seq_len), 0, self.vocab)}
+        if self.family == "vlm":
+            k2 = jax.random.fold_in(key, 1)
+            out["embeds"] = jax.random.normal(
+                k2, (self.global_batch, self.seq_len, self.d_model))
+            out["positions"] = jnp.broadcast_to(
+                jnp.arange(self.seq_len)[None, None],
+                (3, self.global_batch, self.seq_len)).astype(jnp.int32)
+            out["labels"] = out["tokens"]
+        if self.encoder_len:
+            k3 = jax.random.fold_in(key, 2)
+            out["frames"] = jax.random.normal(
+                k3, (self.global_batch, self.encoder_len, self.d_model))
+        return out
+
+
+class OrderedDataFeed:
+    """Per-pod view of the decided batch log: exactly-once iteration.
+
+    ``offer(batch_id)`` records a decided id in log order (driven by the
+    pod's executed command stream); ``take()`` yields each id once. A
+    restart replays ``offer``s from the log; consumed ids before the
+    checkpoint step are skipped via ``fast_forward``."""
+
+    def __init__(self, source: ShardedBatchSource) -> None:
+        self.source = source
+        self._log: list[str] = []
+        self._consumed = 0
+        self._seen: set = set()
+
+    def offer(self, batch_id: str) -> None:
+        if batch_id in self._seen:       # duplicate decision replay
+            return
+        self._seen.add(batch_id)
+        self._log.append(batch_id)
+
+    def take(self) -> Optional[tuple[str, dict]]:
+        if self._consumed >= len(self._log):
+            return None
+        bid = self._log[self._consumed]
+        self._consumed += 1
+        index = int(bid.rsplit("_", 1)[-1]) if "_" in bid else \
+            int("".join(c for c in bid if c.isdigit()) or 0)
+        return bid, self.source.batch(index)
+
+    def fast_forward(self, n: int) -> None:
+        """Skip the first n batches (already folded into a checkpoint)."""
+        self._consumed = min(n, len(self._log))
+
+    @property
+    def position(self) -> int:
+        return self._consumed

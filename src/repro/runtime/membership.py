@@ -1,0 +1,63 @@
+"""Elastic membership: cluster views as ordered reconfiguration commands.
+
+The paper's point (§5.5, vs Mencius/LCR): HT-Paxos tolerates disseminator
+churn WITHOUT a view change — only the *sequencer group* runs elections,
+and clients/disseminators/learners never need to know who leads. We keep
+the same split for the training fleet:
+
+  * pod (disseminator/learner) joins and leaves are SCALE commands in the
+    ordered log — every pod observes the membership flip at the same log
+    position, so resharding happens at an agreed step boundary;
+  * sequencer membership is fixed at service start (the paper's model);
+    leader churn inside it is handled by `core.classic` elections and is
+    invisible to the data plane.
+
+``MembershipView`` additionally derives the device-mesh consequence of a
+view: how many pods participate in the "pod" axis and the FSDP resharding
+plan (which checkpoint shards each new pod must fetch) — the glue between
+the ordered log and `launch.mesh`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MembershipView:
+    epoch: int
+    pods: tuple                      # pod ids, sorted
+    step_boundary: int               # training step at which it activates
+
+    def mesh_pod_axis(self) -> int:
+        return max(1, len(self.pods))
+
+    def reshard_plan(self, n_shards: int) -> dict:
+        """shard k → owning pod (round-robin over the view); a joining pod
+        fetches its shards from the quorum-committed checkpoint, exactly
+        like a restarted learner pulls missing payloads (§4.1 resend)."""
+        return {k: self.pods[k % len(self.pods)]
+                for k in range(n_shards)}
+
+
+class MembershipLog:
+    """Derives the view sequence from applied SCALE commands."""
+
+    def __init__(self, initial_pods: list) -> None:
+        self.views = [MembershipView(0, tuple(sorted(initial_pods)), 0)]
+
+    def apply_scale(self, pods: list, step: int) -> MembershipView:
+        v = MembershipView(self.views[-1].epoch + 1,
+                           tuple(sorted(pods)), step)
+        self.views.append(v)
+        return v
+
+    @property
+    def current(self) -> MembershipView:
+        return self.views[-1]
+
+    def view_at_step(self, step: int) -> MembershipView:
+        out = self.views[0]
+        for v in self.views:
+            if v.step_boundary <= step:
+                out = v
+        return out

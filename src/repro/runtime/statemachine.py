@@ -1,0 +1,89 @@
+"""The trainer as a replicated state machine.
+
+SMR applied to training: every state transition of the training service is
+a *command* ordered by the HT-Paxos ordering layer; pods are learners that
+apply the decided command log in sequence. Because ``train_step`` is a pure
+deterministic function of (state, batch), two pods that apply the same
+command prefix hold bitwise-identical training state — the paper's
+consistency guarantee (§4.3) lifted to whole-model training.
+
+Commands:
+  STEP(batch_id)      — run one train step on the disseminated batch
+  CKPT(step)          — cut a checkpoint; commit needs a disseminator
+                        majority of shard-write acks (§4.4: stability ⇒
+                        f+1 durable copies)
+  SCALE(n_pods)       — elastic membership change (reconfiguration rides
+                        the ordered log, so every pod switches at the same
+                        step boundary)
+  NOOP                — gap filler after leader failover
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Command:
+    kind: str                  # STEP | CKPT | SCALE | NOOP
+    arg: Any = None
+
+    def encode(self) -> tuple:
+        return (self.kind, self.arg)
+
+    @staticmethod
+    def decode(t) -> "Command":
+        return Command(t[0], t[1])
+
+
+def tree_digest(tree) -> str:
+    """Order-stable digest of a pytree of arrays (for replica-consistency
+    audits and checkpoint manifests)."""
+    h = hashlib.sha256()
+    leaves, _ = jax.tree.flatten(tree)
+    for leaf in leaves:
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+class TrainerStateMachine:
+    """One pod's deterministic apply loop."""
+
+    def __init__(self, pod_id: str, train_step: Callable,
+                 init_state, batch_store: dict,
+                 on_ckpt: Optional[Callable] = None) -> None:
+        self.pod_id = pod_id
+        self.train_step = train_step
+        self.state = init_state
+        self.batch_store = batch_store       # batch_id -> batch pytree
+        self.on_ckpt = on_ckpt
+        self.applied: list[tuple] = []       # decided command log
+        self.metrics_log: list[dict] = []
+        self.n_pods = 1
+
+    def apply(self, cmd: Command) -> None:
+        if cmd.kind == "NOOP":
+            pass
+        elif cmd.kind == "STEP":
+            batch = self.batch_store[cmd.arg]
+            self.state, metrics = self.train_step(self.state, batch)
+            self.metrics_log.append(
+                {k: float(v) for k, v in metrics.items()})
+        elif cmd.kind == "CKPT":
+            if self.on_ckpt is not None:
+                self.on_ckpt(self, cmd.arg)
+        elif cmd.kind == "SCALE":
+            self.n_pods = int(cmd.arg)
+        self.applied.append(cmd.encode())
+
+    @property
+    def step(self) -> int:
+        return int(self.state["step"])
+
+    def digest(self) -> str:
+        return tree_digest(self.state["params"])

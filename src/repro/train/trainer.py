@@ -1,0 +1,97 @@
+"""Distributed train step: microbatched grad accumulation + optimizer.
+
+``make_train_step(cfg, ...)`` returns a pure ``train_step(state, batch)``
+suitable for ``jax.jit(in_shardings=…, out_shardings=…,
+donate_argnums=0)``. Gradient accumulation is a ``lax.scan`` over
+microbatches (activations live for one microbatch only — the lever that
+fits MoE dispatch buffers and 4k-seq activations in HBM; per-arch defaults
+in ``configs/<arch>.py::MICROBATCHES``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.common import ModelConfig
+from .optimizer import OptConfig, apply_opt, init_opt
+
+
+def make_state(cfg: ModelConfig, opt_cfg: OptConfig, key=None,
+               abstract: bool = False):
+    """Returns (state, state_axes): {"params","opt","step"} trees."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params, axes = T.init_lm(cfg, key, abstract=abstract)
+    opt, opt_axes = init_opt(opt_cfg, params, axes)
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    state = {"params": params, "opt": opt, "step": step}
+    state_axes = {"params": axes, "opt": opt_axes, "step": ()}
+    return state, state_axes
+
+
+def _split_microbatch(x, m: int, global_batch: int):
+    """Split the (first) axis of size global_batch into [m, gb/m, ...]."""
+    for ax in range(x.ndim):
+        if x.shape[ax] == global_batch:
+            moved = jnp.moveaxis(x, ax, 0)
+            out = moved.reshape(m, global_batch // m, *moved.shape[1:])
+            # restore original axis order within the microbatch
+            return jnp.moveaxis(out, 1, ax + 1)
+    # no batch axis (e.g. scalars): broadcast across microbatches
+    return jnp.broadcast_to(x, (m, *x.shape))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    microbatches: int = 1, global_batch: int,
+                    grad_dtype=jnp.float32):
+    """grad_dtype: accumulation dtype (bf16 for the ≥300B archs — the
+    fp32-accumulator would not fit 16 GB/chip; recorded in DESIGN.md)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = T.lm_loss(params, cfg, mb)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: _split_microbatch(x, microbatches, global_batch),
+                batch)
+
+            def body(gacc, mb):
+                (l, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(grad_dtype), gacc, g)
+                return gacc, l
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
+            grads, losses = jax.lax.scan(body, gacc0, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = {"ce": loss}
+        newp, newo = apply_opt(opt_cfg, params, grads, state["opt"],
+                               state["step"])
+        new_state = {"params": newp, "opt": newo,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": _global_norm(grads)}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def _global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

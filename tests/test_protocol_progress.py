@@ -1,0 +1,90 @@
+"""Progress properties (paper §4.4): with a majority of disseminators,
+a majority of sequencers and ≥1 learner alive, every client request is
+eventually replied AND executed at every live learner."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.htpaxos import HTConfig, HTPaxosSim
+from repro.core.invariants import audit, issued_requests
+from repro.core.network import FaultModel
+
+
+def run_sim(seed=0, drop=0.1, crash_plan=(), until=60_000, **kw):
+    cfg = HTConfig(
+        n_diss=kw.get("n_diss", 5), n_seq=3, n_learners=1,
+        n_clients=kw.get("n_clients", 6), batch_size=2, seed=seed,
+        d1_client_retry=150, d2_id_rebroadcast=100, d3_reply_retry=100,
+        d4_missing_after=50, d5_resend_retry=60, d6_learner_pull=60)
+    cfg.ordering.retry_interval = 40
+    cfg.ordering.election_timeout = 120
+    cfg.ordering.heartbeat_interval = 30
+    fault = FaultModel(drop_p=drop, dup_p=kw.get("dup", 0.05),
+                       jitter=kw.get("jitter", 3.0))
+    sim = HTPaxosSim(cfg, requests_per_client=kw.get("reqs", 4),
+                     client_gap=20.0, fault=fault, fault2=fault)
+    for (t, action) in crash_plan:
+        sim.sched.at(t, action(sim))
+    sim.run(until=until, max_events=4_000_000)
+    return sim
+
+
+def assert_full_progress(sim):
+    issued = issued_requests(sim)
+    replied = sum(len(c.replied) for c in sim.clients)
+    assert replied == len(issued), (replied, len(issued))
+    live = [a for a in sim.all_learner_agents() if a.alive]
+    for a in live:
+        assert set(a.executed) == issued, \
+            f"{a.node_id} executed {len(a.executed)}/{len(issued)}"
+    rep = audit({a.node_id: a.executed for a in live}, issued)
+    assert rep.safe, rep.violations
+
+
+def test_progress_failure_free():
+    assert_full_progress(run_sim(seed=1, drop=0.0))
+
+
+def test_progress_lossy_network():
+    assert_full_progress(run_sim(seed=2, drop=0.2))
+
+
+def test_progress_with_minority_diss_crashes():
+    plan = [
+        (150, lambda sim: (lambda: sim.disseminators[0].crash())),
+        (300, lambda sim: (lambda: sim.disseminators[1].crash())),
+        (700, lambda sim: (lambda: sim.disseminators[0].restart())),
+    ]
+    assert_full_progress(run_sim(seed=3, drop=0.1, crash_plan=plan))
+
+
+def test_progress_with_leader_crash():
+    plan = [(200, lambda sim: (lambda: sim.sequencers[0].crash()))]
+    assert_full_progress(run_sim(seed=4, drop=0.1, crash_plan=plan))
+
+
+def test_progress_minority_sequencer_crash():
+    plan = [(250, lambda sim: (lambda: sim.sequencers[1].crash()))]
+    assert_full_progress(run_sim(seed=5, drop=0.1, crash_plan=plan))
+
+
+def test_client_reply_latency_best_case():
+    """§5.4: 4 message delays to the client reply in the best case."""
+    sim = run_sim(seed=6, drop=0.0, until=100, n_clients=1, reqs=1,
+                  jitter=0.0, dup=0.0)
+    c = sim.clients[0]
+    (rid, t_reply), = c.replied.items()
+    t_sent = c.pending[rid]
+    assert t_reply - t_sent == pytest.approx(4.0), (t_sent, t_reply)
+
+
+def test_learning_latency_best_case():
+    """§5.3: 6 message delays from proposal to learning.
+    Hop trace (1 delay/hop, zero batching linger): client→diss (1),
+    batch multicast (2), id multicast to sequencers (3), phase 2a (4),
+    phase 2b (5), decision multicast (6)."""
+    sim = run_sim(seed=7, drop=0.0, until=5.9, n_clients=1, reqs=1,
+                  jitter=0.0, dup=0.0)
+    assert sum(len(a.executed) for a in sim.all_learner_agents()) == 0
+    sim.run(until=6.1)
+    assert all(len(a.executed) == 1 for a in sim.all_learner_agents())

@@ -1,0 +1,106 @@
+"""Safety properties of HT-Paxos under adversarial network/process faults
+(paper §4.3): prefix consistency, no duplicate execution, nontriviality.
+
+Property-based via hypothesis: random loss/dup/jitter rates, random crash/
+restart schedules for disseminators and sequencers (within the §4.4 quorum
+bounds), random client load. Safety must hold in EVERY run; progress is
+checked opportunistically (replies ⊆ issued always; full progress is
+test_protocol_progress's job under bounded fault rates)."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.htpaxos import HTConfig, HTPaxosSim
+from repro.core.invariants import audit, issued_requests
+from repro.core.network import FaultModel
+
+
+def make_sim(seed, drop, dup, jitter, n_diss, n_seq, n_clients,
+             reqs, batch_size):
+    cfg = HTConfig(
+        n_diss=n_diss, n_seq=n_seq, n_learners=1, n_clients=n_clients,
+        batch_size=batch_size, seed=seed,
+        d1_client_retry=150, d2_id_rebroadcast=100, d3_reply_retry=100,
+        d4_missing_after=50, d5_resend_retry=60, d6_learner_pull=60)
+    cfg.ordering.retry_interval = 40
+    cfg.ordering.election_timeout = 120
+    cfg.ordering.heartbeat_interval = 30
+    fault = FaultModel(drop_p=drop, dup_p=dup, jitter=jitter)
+    return HTPaxosSim(cfg, requests_per_client=reqs, client_gap=20.0,
+                      fault=fault, fault2=fault)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    drop=st.floats(0.0, 0.25),
+    dup=st.floats(0.0, 0.15),
+    jitter=st.floats(0.0, 5.0),
+    n_diss=st.integers(3, 7),
+    n_seq=st.sampled_from([3, 5]),
+    n_clients=st.integers(1, 6),
+    reqs=st.integers(1, 4),
+    batch_size=st.integers(1, 3),
+)
+def test_safety_under_network_faults(seed, drop, dup, jitter, n_diss,
+                                     n_seq, n_clients, reqs, batch_size):
+    sim = make_sim(seed, drop, dup, jitter, n_diss, n_seq, n_clients,
+                   reqs, batch_size)
+    sim.run(until=30_000, max_events=2_000_000)
+    rep = audit(sim.executed_sequences(), issued_requests(sim))
+    assert rep.safe, rep.violations
+    assert all(a.anomaly_dup_ordered == 0
+               for a in sim.all_learner_agents())
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    drop=st.floats(0.0, 0.15),
+    crash_diss=st.integers(0, 2),
+    crash_times=st.lists(st.floats(50, 600), min_size=1, max_size=3),
+    kill_leader=st.booleans(),
+)
+def test_safety_under_crashes(seed, drop, crash_diss, crash_times,
+                              kill_leader):
+    sim = make_sim(seed, drop, 0.05, 3.0, n_diss=5, n_seq=3,
+                   n_clients=4, reqs=3, batch_size=2)
+    # crash/restart disseminators (≤ f = 2 concurrently down)
+    for i, t in enumerate(crash_times[:crash_diss + 1]):
+        d = sim.disseminators[i % 2]       # at most d0, d1 → quorum holds
+        sim.sched.at(t, lambda d=d: d.crash())
+        sim.sched.at(t + 200, lambda d=d: d.restart())
+    if kill_leader:
+        sim.sched.at(150, lambda: sim.sequencers[0].crash())
+    sim.run(until=40_000, max_events=2_000_000)
+    rep = audit(sim.executed_sequences(), issued_requests(sim))
+    assert rep.safe, rep.violations
+
+
+def test_leader_failover_continues_service():
+    sim = make_sim(0, 0.05, 0.0, 2.0, 5, 3, 4, 4, 2)
+    sim.sched.at(200, lambda: sim.sequencers[0].crash())
+    sim.run(until=30_000, max_events=2_000_000)
+    assert sim.leader is not None and sim.leader.node_id != "s0"
+    assert sim.total_replied() == 16
+    rep = audit(sim.executed_sequences(), issued_requests(sim))
+    assert rep.safe, rep.violations
+
+
+def test_no_duplicate_ordering_across_failover():
+    """The §4.1.3 claim: no duplicate batch_id is ordered even without
+    S-Paxos' proposed/reproposed sets."""
+    sim = make_sim(3, 0.10, 0.05, 3.0, 5, 3, 6, 4, 2)
+    sim.sched.at(180, lambda: sim.sequencers[0].crash())
+    sim.sched.at(600, lambda: sim.sequencers[1].crash())
+    sim.sched.at(900, lambda: sim.sequencers[1].restart())
+    sim.run(until=40_000, max_events=2_000_000)
+    for s in sim.sequencers:
+        seen = set()
+        for v in s.stable["decided_log"].values():
+            for bid in v:
+                if bid == "__noop__":
+                    continue
+                assert bid not in seen, f"batch {bid} ordered twice"
+                seen.add(bid)

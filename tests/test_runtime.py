@@ -1,0 +1,165 @@
+"""Runtime integration: checkpoint quorum-commit semantics, SMR training
+service end-to-end (crash/restore/failover), replica consistency."""
+from __future__ import annotations
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.runtime.checkpoint import (latest_committed_step,
+                                      restore_sharded, save_sharded)
+from repro.runtime.coordinator import ServiceConfig, TrainingService
+from repro.runtime.statemachine import Command, tree_digest
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import make_state, make_train_step
+
+
+@pytest.fixture()
+def tiny():
+    cfg = registry.get_smoke("internlm2-1.8b")
+    opt = OptConfig(kind="adamw", lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt, microbatches=1,
+                                   global_batch=4))
+    def init_state():
+        return make_state(cfg, opt, key=jax.random.PRNGKey(42))[0]
+    return cfg, step, init_state
+
+
+def batches(cfg, n, key=0):
+    k = jax.random.PRNGKey(key)
+    out = []
+    for _ in range(n):
+        k, s = jax.random.split(k)
+        out.append({"tokens": jax.random.randint(s, (4, 32), 0,
+                                                 cfg.vocab)})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tiny, tmp_path):
+    cfg, step, init_state = tiny
+    state = init_state()
+    for b in batches(cfg, 2):
+        state, _ = step(state, b)
+    m = save_sharded(state, str(tmp_path), int(state["step"]), n_shards=4)
+    assert m["committed"]
+    restored, m2 = restore_sharded(init_state(), str(tmp_path))
+    assert tree_digest(restored["params"]) == tree_digest(state["params"])
+    assert int(restored["step"]) == int(state["step"])
+
+
+def test_checkpoint_minority_write_failure_still_commits(tiny, tmp_path):
+    cfg, step, init_state = tiny
+    state = init_state()
+    m = save_sharded(state, str(tmp_path), 0, n_shards=5,
+                     fail_shards={1, 3})   # 3/5 acks = majority
+    assert m["committed"]
+    restored, _ = restore_sharded(init_state(), str(tmp_path))
+    assert tree_digest(restored["params"]) == tree_digest(state["params"])
+
+
+def test_checkpoint_majority_failure_does_not_commit(tiny, tmp_path):
+    cfg, step, init_state = tiny
+    state = init_state()
+    m = save_sharded(state, str(tmp_path), 0, n_shards=5,
+                     fail_shards={0, 1, 2})
+    assert not m["committed"]
+    assert latest_committed_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        restore_sharded(init_state(), str(tmp_path))
+
+
+def test_restore_picks_latest_committed(tiny, tmp_path):
+    cfg, step, init_state = tiny
+    state = init_state()
+    save_sharded(state, str(tmp_path), 1, n_shards=4)
+    for b in batches(cfg, 1):
+        state, _ = step(state, b)
+    save_sharded(state, str(tmp_path), 2, n_shards=4)
+    # a later torn save (no quorum) must be ignored
+    save_sharded(state, str(tmp_path), 3, n_shards=4,
+                 fail_shards={0, 1, 2})
+    assert latest_committed_step(str(tmp_path)) == 2
+    _, m = restore_sharded(init_state(), str(tmp_path))
+    assert m["step"] == 2
+
+
+# ---------------------------------------------------------------------------
+# SMR training service
+# ---------------------------------------------------------------------------
+
+def make_service(tiny, tmp_path, n_pods=2):
+    cfg, step, init_state = tiny
+    svc = TrainingService(
+        ServiceConfig(n_pods=n_pods, ckpt_dir=str(tmp_path)),
+        step, init_state)
+    return cfg, svc, init_state
+
+
+def test_pods_stay_bitwise_consistent(tiny, tmp_path):
+    cfg, svc, _ = make_service(tiny, tmp_path)
+    for b in batches(cfg, 5):
+        svc.submit_command(svc.submit_batch(b))
+    svc.run(until=400)
+    steps = {p: sm.step for p, sm in svc.pods.items()}
+    assert set(steps.values()) == {5}
+    assert svc.consistent()
+    d = set(svc.digests().values())
+    assert len(d) == 1
+
+
+def test_pod_crash_restart_catches_up(tiny, tmp_path):
+    cfg, svc, init_state = make_service(tiny, tmp_path)
+    for b in batches(cfg, 3):
+        svc.submit_command(svc.submit_batch(b))
+    svc.submit_command(Command("CKPT", 3))
+    svc.run(until=400)
+    svc.crash_pod("pod1")
+    for b in batches(cfg, 3, key=9):
+        svc.submit_command(svc.submit_batch(b))
+    svc.run(until=900)
+    svc.restart_pod("pod1", template_state=init_state())
+    svc.run(until=2000)
+    steps = {p: sm.step for p, sm in svc.pods.items()}
+    assert steps["pod0"] == steps["pod1"] == 6, steps
+    assert svc.consistent()
+
+
+def test_service_survives_leader_failover(tiny, tmp_path):
+    cfg, svc, _ = make_service(tiny, tmp_path)
+    for b in batches(cfg, 2):
+        svc.submit_command(svc.submit_batch(b))
+    svc.run(until=300)
+    old = svc.leader_id()
+    svc.crash_leader()
+    for b in batches(cfg, 2, key=5):
+        svc.submit_command(svc.submit_batch(b))
+    svc.run(until=2500)
+    assert svc.leader_id() not in (None, old)
+    steps = {p: sm.step for p, sm in svc.pods.items()}
+    assert set(steps.values()) == {4}, steps
+    assert svc.consistent()
+
+
+def test_elastic_scale_command_ordered(tiny, tmp_path):
+    """SCALE rides the ordered log: every pod observes the membership
+    change at the same position in its command sequence."""
+    cfg, svc, _ = make_service(tiny, tmp_path)
+    for b in batches(cfg, 2):
+        svc.submit_command(svc.submit_batch(b))
+    svc.submit_command(Command("SCALE", 4))
+    for b in batches(cfg, 2, key=7):
+        svc.submit_command(svc.submit_batch(b))
+    svc.run(until=600)
+    logs = [sm.applied for sm in svc.pods.values()]
+    assert logs[0] == logs[1]
+    pos = [i for i, c in enumerate(logs[0]) if c[0] == "SCALE"]
+    assert len(pos) == 1
+    assert all(sm.n_pods == 4 for sm in svc.pods.values())

@@ -1,0 +1,54 @@
+"""End-to-end behaviour of the full system: HT-Paxos control plane driving
+real JAX training across simulated pods, with the paper's headline
+property checked at the system level — throughput work rides the
+disseminators/pods while the ordering leader stays lightweight."""
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.runtime.coordinator import ServiceConfig, TrainingService
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import make_state, make_train_step
+
+
+def test_training_service_end_to_end(tmp_path):
+    cfg = registry.get_smoke("qwen3-14b")
+    opt = OptConfig(kind="adamw", lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt, microbatches=1,
+                                   global_batch=4))
+
+    def init_state():
+        return make_state(cfg, opt, key=jax.random.PRNGKey(7))[0]
+
+    svc = TrainingService(
+        ServiceConfig(n_pods=2, ckpt_dir=str(tmp_path)), step, init_state)
+    key = jax.random.PRNGKey(0)
+    for _ in range(4):
+        key, k = jax.random.split(key)
+        svc.submit_command(svc.submit_batch(
+            {"tokens": jax.random.randint(k, (4, 32), 0, cfg.vocab)}))
+    svc.run(until=500)
+
+    # every pod applied the same ordered log and holds identical params
+    assert {sm.step for sm in svc.pods.values()} == {4}
+    assert svc.consistent()
+    logs = [sm.applied for sm in svc.pods.values()]
+    assert logs[0] == logs[1]
+
+    # the paper's claim at system level: the ordering leader never touches
+    # payload traffic — zero LAN-1 (bulk plane) bytes at the leader, while
+    # every disseminator carries the batch payloads. (Total message counts
+    # only separate at scale — §5.1 assumes large m and steady high load;
+    # at this toy scale heartbeat/catch-up chatter dominates, so we assert
+    # the structural property rather than the asymptotic count.)
+    sim = svc.sim
+    leader_lan1 = sim.lan1._stats(svc.leader_id()).total_bytes()
+    diss_lan1 = [sim.lan1._stats(d).total_bytes() for d in sim.diss_ids]
+    assert leader_lan1 == 0, leader_lan1
+    assert min(diss_lan1) > 0, diss_lan1
+
+    # loss must actually train (decrease over the applied log)
+    ml = svc.pods["pod0"].metrics_log
+    assert ml[-1]["loss"] < ml[0]["loss"]
