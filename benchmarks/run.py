@@ -12,11 +12,16 @@ figure-level quantity the paper plots).
   delays §5.3/5.4 measured best-case message delays (executable sims)
   sim_throughput  measured DES busiest-node load, HT vs S-Paxos
   engine  vectorized JAX ordering engine ids/s (jit, CPU here)
+  sharded_engine  multi-group sharded ordering engine (repro.engine):
+          G ∈ {1,2,4,8} groups at equal total window, per-group leader
+          ordering budget — also written to BENCH_sharded_engine.json
   kernels interpret-mode kernel sanity timings
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -213,6 +218,63 @@ def bench_engine() -> None:
     emit("engine/ids_per_sec", us, f"{ordered / (us / 1e6):.0f}")
 
 
+def bench_sharded_engine() -> None:
+    """Multi-group sharded ordering engine (repro.engine) — decided
+    ids/second draining a saturated backlog at *equal total window size*.
+
+    The bottleneck modeled is the paper's §5.1 one: a sequencer-group
+    leader can assign at most ``BUDGET`` ordering instances per tick
+    (classic.py's pipeline_depth × order_batch_max cap), so a single group
+    needs W/BUDGET ticks to drain a W-id backlog no matter how wide its
+    window is. G groups have G leaders draining concurrently (one fused
+    vmapped tick), so the same 8192-id backlog drains in 1/G the ticks —
+    the Multi-Ring scaling argument, measured end-to-end *including* the
+    deterministic round-robin merge that produces the single learner log.
+    """
+    import jax
+    from repro.engine import merge as M
+    from repro.engine import sharded as S
+
+    W_TOTAL, D, SEQ, BUDGET, SLACK = 8192, 1000, 16, 64, 4
+    words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
+    rows = []
+    base = None
+    for G in (1, 2, 4, 8):
+        Wg = W_TOTAL // G
+        T = W_TOTAL // (G * BUDGET) + SLACK
+        # saturated backlog: every slot majority-acked from tick 0; the
+        # ordering budget is the only throughput limiter (as in §5.1)
+        packs = np.full((T, G, Wg, words_d), 0xFFFFFFFF, np.uint32)
+        pvotes = np.full((T, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
+        slot_ids = S.default_slot_ids(G, Wg)
+        st0 = S.init_sharded(G, Wg, D, SEQ)
+        ms0 = M.init_merge(G, T * BUDGET)
+
+        def run():
+            st, ms, merged, cnt, committed = S.run_sharded_ticks_merged(
+                st0, ms0, packs, pvotes, slot_ids,
+                diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
+                order_budget=BUDGET)
+            # votes are saturated: every ordered id is also committed, so
+            # the consumable prefix IS the full merged order
+            return jax.block_until_ready(committed)
+        us = _t(run, n=5)
+        ordered = int(run())
+        ids_per_sec = ordered / (us / 1e6)
+        emit(f"sharded_engine/G={G}", us, f"{ids_per_sec:.0f} ids/s "
+             f"({ordered} ids, {T} ticks, budget={BUDGET})")
+        if G == 1:
+            base = ids_per_sec
+        rows.append({"name": f"sharded_engine/G={G}", "us_per_call": us,
+                     "ids_per_sec": ids_per_sec, "G": G, "W": W_TOTAL,
+                     "window_per_group": Wg, "ticks": T,
+                     "order_budget": BUDGET, "ids_ordered": ordered,
+                     "speedup_vs_G1": ids_per_sec / base})
+    out = Path(__file__).resolve().parent / "BENCH_sharded_engine.json"
+    out.write_text(json.dumps(rows, indent=2) + "\n")
+    emit("sharded_engine/json", 0.1, out.name)
+
+
 def bench_kernels() -> None:
     import jax
     import jax.numpy as jnp
@@ -240,7 +302,7 @@ def bench_kernels() -> None:
 
 BENCHES = [bench_fig1, bench_fig2, bench_fig3, bench_fig45, bench_fig6,
            bench_fig7, bench_delays, bench_sim_throughput, bench_engine,
-           bench_kernels]
+           bench_sharded_engine, bench_kernels]
 
 
 def main() -> None:

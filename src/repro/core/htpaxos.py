@@ -19,6 +19,16 @@ message count ``m`` per unit time (§5.1.1.2) rather than ``m²``.
 The FT variant (§4.2 "all disseminator sites also have a sequencer") is
 modeled by the ``site_map`` accounting: traffic of co-located agents is
 summed per site (the paper's Figs 3/7 busiest-*site* numbers).
+
+Multi-group ordering (``n_groups > 1``, Multi-Ring-style — see
+``repro.engine``): the ordering layer is sharded across independent
+sequencer groups; each batch_id is owned by the group
+``engine.router.route_id`` hashes it to, disseminators id-multicast only
+to the owning group, and every learner merges the per-group decision logs
+with a *strict deterministic round-robin* over per-group instance cursors.
+Idle group leaders fill their logs with explicit no-op (skip) instances so
+a slow group cannot stall the merged log unboundedly — the skips are
+decided in-band, which is what keeps the merge identical at every learner.
 """
 from __future__ import annotations
 
@@ -28,8 +38,9 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .agents import Agent, SimBase
-from .classic import OrderingConfig, PaxosSequencer
+from .classic import NOOP, OrderingConfig, PaxosSequencer
 from .network import ID_BYTES, Lan, Msg, OVERHEAD
+from ..engine.router import partition_ids
 
 
 @dataclass
@@ -54,6 +65,12 @@ class HTConfig:
     ordering: OrderingConfig = field(default_factory=OrderingConfig)
     # FT variant (§4.2): sequencer co-located on every disseminator site
     fault_tolerant_colocation: bool = False
+    # multi-group sharded ordering (repro.engine): G independent sequencer
+    # groups of n_seq each; 1 = the paper's single group (exact seed path)
+    n_groups: int = 1
+    # idle leaders decide explicit no-op (skip) instances at this period so
+    # a quiet group cannot stall the learners' round-robin merge
+    group_skip_interval: float = 4.0
 
 
 def batch_bytes(n_requests: int, request_bytes: int) -> int:
@@ -119,7 +136,54 @@ class ClientNode(Agent):
                       size=OVERHEAD + ID_BYTES, rid=rid)
 
 
-class DissNode(Agent):
+class MergedExecutionMixin:
+    """Learner-side execution over per-group decision logs: strict
+    deterministic round-robin — consume the next instance of group r, then
+    advance to group r+1, ... — blocking until group r's next instance is
+    decided (idle groups decide explicit no-op skips, so the merge never
+    stalls unboundedly). G=1 degenerates to the paper's single sequential
+    cursor. Shared by DissNode's co-located learner and LearnerNode so the
+    two node types can never diverge on merge semantics."""
+
+    def _init_merged_exec(self, n_groups: int) -> None:
+        self._exec_cursor = [0] * n_groups
+        self._merge_ring = 0
+        self.executed: list[tuple] = []              # rid execution order
+        self.executed_bid_order: list[tuple] = []    # merged bid order
+        self._executed_bids: set = set()
+        self._executed_rids: set = set()
+
+    def _try_execute(self) -> None:
+        log = self.stable["instance_log"]
+        rs = self.stable["requests_set"]
+        G = self.hsim.cfg.n_groups
+        while True:
+            g = self._merge_ring
+            key = (g, self._exec_cursor[g])
+            if key not in log:
+                break
+            bids = [b for b in log[key] if b != "__noop__"]
+            if any(b not in rs for b in bids):
+                break  # wait for payload pull (Δ4/Δ5 machinery)
+            for bid in bids:
+                if bid in self._executed_bids:
+                    self.anomaly_dup_ordered += 1
+                    continue
+                self._executed_bids.add(bid)
+                self.executed_bid_order.append(bid)
+                for rid in rs[bid]:
+                    # §3: "learners discard duplicate proposals" — a client
+                    # Δ1-retry may have landed the same request in a second
+                    # disseminator's batch; execute each rid exactly once
+                    if rid in self._executed_rids:
+                        continue
+                    self._executed_rids.add(rid)
+                    self.executed.append(rid)             # [step 46]
+            self._exec_cursor[g] += 1
+            self._merge_ring = (g + 1) % G
+
+
+class DissNode(MergedExecutionMixin, Agent):
     """Disseminator + co-located learner. [steps 12–34, 38–46]"""
 
     def __init__(self, sim: "HTPaxosSim", node_id: str) -> None:
@@ -142,8 +206,7 @@ class DissNode(Agent):
         self.id_outbox: list[tuple] = []
         self.id_seen_from: dict[tuple, str] = {}     # batch_id -> src (step 25)
         self.undecided_known: set = set()            # for Δ2 rebroadcast
-        self.executed: list[tuple] = []              # learner execution order
-        self._exec_instance = 0                      # next instance to execute
+        self._init_merged_exec(sim.cfg.n_groups)     # co-located learner
         self.anomaly_dup_ordered = 0                 # invariant: stays 0
         self._batch_timer_armed = False
         self._id_timer_armed = False
@@ -190,7 +253,8 @@ class DissNode(Agent):
                           size=batch_bytes(len(rids), self.cfg.request_bytes),
                           bid=bid, rids=rids)
         elif k == "decision":                                 # ordering layer
-            self._on_decision(p["entries"])
+            self._on_decision(p["entries"],
+                              self.hsim.group_of_seq.get(msg.src, 0))
 
     def _rid_batch(self, rid) -> Optional[tuple]:
         for bid, rids in self.own_batches.items():
@@ -239,16 +303,19 @@ class DissNode(Agent):
             return
         ids = tuple(self.id_outbox)
         self.id_outbox = []
-        self.multicast(self.hsim.lan2, self.hsim.seq_ids, "ids",
-                       size=OVERHEAD + ID_BYTES * len(ids), ids=ids)
+        # [step 18] each id goes only to its owning ordering group
+        for g, gids in self.hsim.ids_by_group(ids):
+            self.multicast(self.hsim.lan2, self.hsim.seq_groups[g], "ids",
+                           size=OVERHEAD + ID_BYTES * len(gids), ids=gids)
 
     def _rebroadcast_ids(self) -> None:
         # [steps 18–19] Δ2: re-multicast undecided known ids to sequencers
         if not self.undecided_known:
             return
         ids = tuple(sorted(self.undecided_known))
-        self.multicast(self.hsim.lan2, self.hsim.seq_ids, "ids",
-                       size=OVERHEAD + ID_BYTES * len(ids), ids=ids)
+        for g, gids in self.hsim.ids_by_group(ids):
+            self.multicast(self.hsim.lan2, self.hsim.seq_groups[g], "ids",
+                           size=OVERHEAD + ID_BYTES * len(gids), ids=gids)
 
     # ---- client replies [steps 20–24] ---------------------------------------
 
@@ -291,17 +358,18 @@ class DissNode(Agent):
 
     # ---- learner role [steps 38–46] -----------------------------------------
 
-    def _on_decision(self, entries) -> None:
-        """Record ordering-layer decisions keyed by *instance number* — the
-        paper: "Every Learner learns request_id sequentially as per the
-        instance numbers of classical Paxos" (§4.1.3). Arrival order of
-        decision messages is irrelevant; execution only advances over a
-        contiguous instance prefix."""
+    def _on_decision(self, entries, group: int = 0) -> None:
+        """Record ordering-layer decisions keyed by *(group, instance)* —
+        the paper: "Every Learner learns request_id sequentially as per the
+        instance numbers of classical Paxos" (§4.1.3), here per ordering
+        group. Arrival order of decision messages is irrelevant; execution
+        only advances over the deterministic round-robin merge of the
+        per-group contiguous prefixes."""
         log = self.stable["instance_log"]
         for (inst, value) in entries:
-            if inst in log:
+            if (group, inst) in log:
                 continue
-            log[inst] = value
+            log[(group, inst)] = value
             for bid in value:
                 if bid == "__noop__":
                     continue
@@ -311,44 +379,22 @@ class DissNode(Agent):
         self._try_execute()
 
     def _catch_up(self) -> None:
-        """Catch-up pull: whenever the execution-frontier instance is not
-        yet known locally, ask a sequencer for the decided log from the
-        frontier (covers both dropped decision multicasts and restart
-        recovery, where the node cannot know how far the log advanced
-        while it was down). A no-op reply costs one message."""
+        """Catch-up pull: whenever a group's execution-frontier instance is
+        not yet known locally, ask a sequencer of that group for the
+        decided log from the frontier (covers both dropped decision
+        multicasts and restart recovery, where the node cannot know how far
+        the log advanced while it was down). A no-op reply costs one
+        message."""
         log = self.stable["instance_log"]
-        if self._exec_instance not in log:
-            tgt = self.rng.choice(self.hsim.seq_ids)
-            self.send(self.hsim.lan2, tgt, "learn_req",
-                      size=OVERHEAD + ID_BYTES, **{"from": self._exec_instance})
+        for g in range(self.hsim.cfg.n_groups):
+            if (g, self._exec_cursor[g]) not in log:
+                tgt = self.rng.choice(self.hsim.seq_groups[g])
+                self.send(self.hsim.lan2, tgt, "learn_req",
+                          size=OVERHEAD + ID_BYTES,
+                          **{"from": self._exec_cursor[g]})
 
-    def _try_execute(self) -> None:
-        log = self.stable["instance_log"]
-        rs = self.stable["requests_set"]
-        executed_bids = getattr(self, "_executed_bids", None)
-        if executed_bids is None:
-            executed_bids = self._executed_bids = set()
-        if not hasattr(self, "_executed_rids"):
-            self._executed_rids = set()
-        while self._exec_instance in log:
-            value = log[self._exec_instance]
-            bids = [b for b in value if b != "__noop__"]
-            if any(b not in rs for b in bids):
-                break  # wait for payload pull (Δ4/Δ5 machinery)
-            for bid in bids:
-                if bid in executed_bids:
-                    self.anomaly_dup_ordered += 1
-                    continue
-                executed_bids.add(bid)
-                for rid in rs[bid]:
-                    # §3: "learners discard duplicate proposals" — a client
-                    # Δ1-retry may have landed the same request in a second
-                    # disseminator's batch; execute each rid exactly once
-                    if rid in self._executed_rids:
-                        continue
-                    self._executed_rids.add(rid)
-                    self.executed.append(rid)
-            self._exec_instance += 1
+    # _try_execute: the round-robin merged execution loop is inherited
+    # from MergedExecutionMixin
 
     def on_restart(self) -> None:
         # volatile state lost; stable requests_set / instance_log survive
@@ -357,10 +403,7 @@ class DissNode(Agent):
         self.id_outbox = []
         self._batch_timer_armed = False
         self._id_timer_armed = False
-        self.executed = []
-        self._exec_instance = 0
-        self._executed_bids = set()
-        self._executed_rids = set()
+        self._init_merged_exec(self.hsim.cfg.n_groups)
         self.undecided_known = set(
             bid for bid in self.stable["requests_set"]
             if bid not in self.stable["decided_ids"])
@@ -370,7 +413,7 @@ class DissNode(Agent):
         self._try_execute()
 
 
-class LearnerNode(Agent):
+class LearnerNode(MergedExecutionMixin, Agent):
     """Standalone learner [steps 39–46]."""
 
     def __init__(self, sim: "HTPaxosSim", node_id: str) -> None:
@@ -380,10 +423,7 @@ class LearnerNode(Agent):
         self.rng = random.Random(zlib.crc32(f"{sim.cfg.seed}:{node_id}:l".encode()))
         self.stable.setdefault("requests_set", {})
         self.stable.setdefault("instance_log", {})
-        self.executed: list[tuple] = []
-        self._exec_instance = 0
-        self._executed_bids: set = set()
-        self._executed_rids: set = set()
+        self._init_merged_exec(sim.cfg.n_groups)
         self.anomaly_dup_ordered = 0
         self.periodic(self.cfg.d6_learner_pull, self._pull_missing)
 
@@ -393,17 +433,18 @@ class LearnerNode(Agent):
             self.stable["requests_set"][p["bid"]] = p["rids"]
             self._try_execute()
         elif k == "decision":
+            g = self.hsim.group_of_seq.get(msg.src, 0)
             log = self.stable["instance_log"]
             for (inst, value) in p["entries"]:
-                log.setdefault(inst, value)
+                log.setdefault((g, inst), value)
             self._try_execute()
 
     def _pull_missing(self) -> None:                          # [steps 43–45]
         rs = self.stable["requests_set"]
         log = self.stable["instance_log"]
         # missing payloads for decided instances
-        for inst, value in log.items():
-            if inst < self._exec_instance:
+        for (g, inst), value in log.items():
+            if inst < self._exec_cursor[g]:
                 continue
             for bid in value:
                 if bid != "__noop__" and bid not in rs:
@@ -411,35 +452,17 @@ class LearnerNode(Agent):
                     self.send(self.hsim.lan2, tgt, "resend",
                               size=OVERHEAD + ID_BYTES, bid=bid)
         # instance-frontier repair (incl. restart recovery)
-        if self._exec_instance not in log:
-            tgt = self.rng.choice(self.hsim.seq_ids)
-            self.send(self.hsim.lan2, tgt, "learn_req",
-                      size=OVERHEAD + ID_BYTES, **{"from": self._exec_instance})
+        for g in range(self.hsim.cfg.n_groups):
+            if (g, self._exec_cursor[g]) not in log:
+                tgt = self.rng.choice(self.hsim.seq_groups[g])
+                self.send(self.hsim.lan2, tgt, "learn_req",
+                          size=OVERHEAD + ID_BYTES,
+                          **{"from": self._exec_cursor[g]})
 
-    def _try_execute(self) -> None:
-        log = self.stable["instance_log"]
-        rs = self.stable["requests_set"]
-        while self._exec_instance in log:
-            bids = [b for b in log[self._exec_instance] if b != "__noop__"]
-            if any(b not in rs for b in bids):
-                break
-            for bid in bids:
-                if bid in self._executed_bids:
-                    self.anomaly_dup_ordered += 1
-                    continue
-                self._executed_bids.add(bid)
-                for rid in rs[bid]:
-                    if rid in self._executed_rids:            # §3 dedup
-                        continue
-                    self._executed_rids.add(rid)
-                    self.executed.append(rid)                 # [step 46]
-            self._exec_instance += 1
+    # _try_execute: inherited from MergedExecutionMixin
 
     def on_restart(self) -> None:
-        self.executed = []
-        self._exec_instance = 0
-        self._executed_bids = set()
-        self._executed_rids = set()
+        self._init_merged_exec(self.hsim.cfg.n_groups)
         self.periodic(self.cfg.d6_learner_pull, self._pull_missing)
         self._try_execute()
 
@@ -452,13 +475,38 @@ class HTSequencer(PaxosSequencer):
 
     def __init__(self, sim: "HTPaxosSim", node_id: str, rank: int,
                  peers: list[str], cfg: OrderingConfig,
-                 initial_leader: bool = False) -> None:
+                 initial_leader: bool = False, group_idx: int = 0) -> None:
         super().__init__(sim, node_id, rank, peers, cfg, initial_leader)
         self.hsim = sim
+        self.group_idx = group_idx
         self.stable.setdefault("stable_ids", [])     # FIFO of stable batch_ids
         self.stable.setdefault("stable_set", set())
         self.stable.setdefault("decided_ids", set())
         self.id_votes: dict[tuple, set] = {}         # batch_id -> diss heard
+        self._skip_armed = False
+
+    def start(self) -> None:
+        super().start()
+        # multi-group only: an idle leader periodically decides an explicit
+        # no-op (skip) instance — Multi-Ring's skip messages — so the
+        # learners' strict round-robin merge never blocks on a quiet group.
+        # In-band skips keep the merge deterministic at every learner.
+        if self.hsim.cfg.n_groups > 1 and not self._skip_armed:
+            self._skip_armed = True
+            self.periodic(self.hsim.cfg.group_skip_interval,
+                          self._maybe_skip)
+
+    def _maybe_skip(self) -> None:
+        if not self.is_leader or self.recovery_pending or self.inflight:
+            return
+        if self.stable["stable_ids"]:
+            return  # real work pending — _flush_pool will propose it
+        self._propose(self.next_instance, NOOP)
+        self.next_instance += 1
+
+    def on_restart(self) -> None:
+        self._skip_armed = False        # timers are volatile across crashes
+        super().on_restart()
 
     # sequencer stability rule [steps 36–37]
     def on_other_message(self, msg: Msg, lan: Lan) -> None:
@@ -528,8 +576,25 @@ class HTPaxosSim(SimBase):
         super().__init__(seed=cfg.seed, latency=latency,
                          fault=fault, fault2=fault2)
         self.cfg = cfg
+        if cfg.fault_tolerant_colocation and cfg.n_groups > 1:
+            # §4.2's FT variant ("all disseminator sites also have a
+            # sequencer") is defined for the single-group topology; the
+            # flat-index colocation rule would smear groups across
+            # dissemination sites arbitrarily and corrupt the busiest-site
+            # metrics. Refuse loudly until a per-group rule exists.
+            raise ValueError(
+                "fault_tolerant_colocation with n_groups > 1 is not "
+                "supported (undefined site mapping)")
         self.diss_ids = [f"d{i}" for i in range(cfg.n_diss)]
-        self.seq_ids = [f"s{i}" for i in range(cfg.n_seq)]
+        # ordering groups: group 0 keeps the paper's s0..s{n-1} naming (the
+        # exact single-group topology when n_groups == 1); extra groups are
+        # g<k>s<i>. seq_ids stays the flat list across all groups.
+        self.seq_groups: list[list[str]] = [
+            [f"s{i}" if g == 0 else f"g{g}s{i}" for i in range(cfg.n_seq)]
+            for g in range(cfg.n_groups)]
+        self.seq_ids = [s for grp in self.seq_groups for s in grp]
+        self.group_of_seq = {s: g for g, grp in enumerate(self.seq_groups)
+                             for s in grp}
         self.learner_ids = [f"l{i}" for i in range(cfg.n_learners)]
         self.client_ids = [f"c{i}" for i in range(cfg.n_clients)]
         # site accounting (FT variant co-locates sequencer k on diss site k)
@@ -544,9 +609,10 @@ class HTPaxosSim(SimBase):
 
         self.disseminators = [DissNode(self, d) for d in self.diss_ids]
         self.sequencers = [
-            HTSequencer(self, s, rank=i, peers=self.seq_ids,
-                        cfg=cfg.ordering, initial_leader=(i == 0))
-            for i, s in enumerate(self.seq_ids)]
+            HTSequencer(self, s, rank=i, peers=grp, cfg=cfg.ordering,
+                        initial_leader=(i == 0), group_idx=g)
+            for g, grp in enumerate(self.seq_groups)
+            for i, s in enumerate(grp)]
         self.learners = [LearnerNode(self, l) for l in self.learner_ids]
         self.clients = [
             ClientNode(self, c, n_requests=requests_per_client,
@@ -564,6 +630,50 @@ class HTPaxosSim(SimBase):
             if s.is_leader and s.alive:
                 return s
         return None
+
+    def group_leader(self, g: int) -> Optional[HTSequencer]:
+        for s in self.sequencers:
+            if s.group_idx == g and s.is_leader and s.alive:
+                return s
+        return None
+
+    def ids_by_group(self, ids) -> list[tuple[int, tuple]]:
+        """Partition batch_ids by owning ordering group via
+        ``engine.router.partition_ids`` (crc32 on the id's repr — note the
+        engine's vectorized ``route_ids`` is a *different* hash for uint32
+        arrays; cross-validating DES against the engine must route both
+        sides with ``route_id``). Returns only non-empty (group,
+        ids-tuple) pairs, group-ascending."""
+        if self.cfg.n_groups == 1:
+            return [(0, tuple(ids))]
+        return [(g, tuple(part)) for g, part in
+                enumerate(partition_ids(ids, self.cfg.n_groups)) if part]
+
+    def group_decided_orders(self) -> list[list]:
+        """Canonical per-group bid order: each group's decided log sorted by
+        instance (Paxos safety makes every member's log agree on the
+        prefix), no-ops dropped."""
+        orders = []
+        for grp in self.seq_groups:
+            log: dict = {}
+            for s in grp:
+                log.update(self.agents[s].stable["decided_log"])
+            orders.append([bid for inst in sorted(log) for bid in log[inst]
+                           if bid != "__noop__"])
+        return orders
+
+    def check_merged_interleaving(self) -> list:
+        """Invariant (engine merge ↔ DES): every learner's executed bid
+        order must be a legal interleaving of the per-group decided orders
+        — its restriction to group g equals a prefix of group g's decided
+        order. Returns violations (empty = invariant holds)."""
+        from .invariants import check_legal_interleaving
+        orders = self.group_decided_orders()
+        out = []
+        for a in self.all_learner_agents():
+            out += [(a.node_id, *v) for v in check_legal_interleaving(
+                a.executed_bid_order, orders)]
+        return out
 
     def all_learner_agents(self) -> list:
         return list(self.disseminators) + list(self.learners)

@@ -63,6 +63,30 @@ def check_nontriviality(sequences: dict[str, list], issued: set) -> list:
     return out
 
 
+def check_legal_interleaving(merged: list, group_orders: list[list]) -> list:
+    """Multi-group merge invariant (repro.engine / Multi-Ring §2.5): a
+    merged log is legal iff its restriction to each ordering group's ids is
+    a prefix of that group's decided order, and it contains no ids owned by
+    no group. Returns violation tuples (empty = legal)."""
+    owner: dict = {}
+    for g, order in enumerate(group_orders):
+        for x in order:
+            owner.setdefault(x, g)
+    out = []
+    cursors = [0] * len(group_orders)
+    for pos, x in enumerate(merged):
+        g = owner.get(x)
+        if g is None:
+            out.append(("foreign", pos, x))
+            continue
+        if cursors[g] >= len(group_orders[g]):
+            out.append(("overrun", pos, x, g))
+        elif group_orders[g][cursors[g]] != x:
+            out.append(("reorder", pos, x, g, group_orders[g][cursors[g]]))
+        cursors[g] += 1
+    return out
+
+
 def audit(sequences: dict[str, list], issued: set | None = None)\
         -> AuditReport:
     rep = AuditReport()

@@ -21,6 +21,20 @@ vmappable, shardable along W (and scannable over ticks for throughput
 benchmarks). ``repro.kernels.quorum`` provides the fused Pallas TPU kernel
 for steps 1–3; this module is its reference implementation and the
 CPU/dry-run path.
+
+The un-jitted ``*_packed`` cores below operate on pre-packed uint32 bitset
+tiles (the wire format of a disseminator id-multicast). They are the G=1
+special case of the multi-group engine: ``repro.engine.sharded`` vmaps
+exactly these functions along a leading group axis, so the public
+single-group API here and the sharded engine are the same math by
+construction.
+
+``order_budget`` models the ordering-layer bottleneck the paper analyses in
+§5.1: a sequencer-group leader can assign at most
+``pipeline_depth × order_batch_max`` instances per flush (classic.py's
+pipelining/batching caps), so a single group's ordering throughput is
+bounded per tick no matter how wide the window is. ``None`` keeps the
+legacy unbounded behavior (bit-identical to the seed engine).
 """
 from __future__ import annotations
 
@@ -72,37 +86,39 @@ def popcount_rows(bits: jax.Array) -> jax.Array:
     return jnp.sum(jax.lax.population_count(bits).astype(jnp.int32), axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("majority",))
-def absorb_acks(state: QuorumState, acks: jax.Array, *, majority: int)\
-        -> QuorumState:
-    """Steps 1–3: OR in a dense ack tile and refresh stability flags."""
-    ack_bits = state.ack_bits | pack_tile(acks)
+# -- un-jitted packed cores (vmapped by repro.engine.sharded) -----------------
+
+def absorb_acks_packed(state: QuorumState, packed: jax.Array,
+                       majority: int) -> QuorumState:
+    """Steps 1–3 on a pre-packed uint32[W, WORDS] update tile."""
+    ack_bits = state.ack_bits | packed
     counts = popcount_rows(ack_bits)
     stable = state.stable | (counts >= majority)
     return state._replace(ack_bits=ack_bits, stable=stable)
 
 
-@jax.jit
-def assign_instances(state: QuorumState) -> tuple[QuorumState, jax.Array]:
-    """Step 4: leader assigns consecutive instances to newly-stable ids.
-
-    Returns (state, assigned) where assigned[i] is the instance given to
-    slot i this call or -1."""
+def assign_instances_core(state: QuorumState,
+                          order_budget: int | None = None)\
+        -> tuple[QuorumState, jax.Array]:
+    """Step 4: leader assigns consecutive instances to newly-stable ids in
+    slot (FIFO) order, at most ``order_budget`` per call (§5.1 pipeline
+    bound; None = unbounded). Returns (state, assigned) where assigned[i]
+    is the instance given to slot i this call or -1."""
     fresh = state.stable & (state.instance < 0)
     # exclusive cumsum gives each fresh slot its offset in FIFO (slot) order
     offs = jnp.cumsum(fresh.astype(jnp.int32)) - fresh.astype(jnp.int32)
+    if order_budget is not None:
+        fresh = fresh & (offs < order_budget)
     assigned = jnp.where(fresh, state.next_instance + offs, -1)
     instance = jnp.where(fresh, assigned, state.instance)
     nxt = state.next_instance + jnp.sum(fresh, dtype=jnp.int32)
     return state._replace(instance=instance, next_instance=nxt), assigned
 
 
-@functools.partial(jax.jit, static_argnames=("majority",))
-def absorb_votes(state: QuorumState, votes: jax.Array, *, majority: int)\
-        -> tuple[QuorumState, jax.Array]:
-    """Step 5: classical-Paxos phase-2b commit — same quorum primitive over
-    sequencer bitsets. Returns (state, newly_decided mask)."""
-    vote_bits = state.vote_bits | pack_tile(votes)
+def absorb_votes_packed(state: QuorumState, packed: jax.Array,
+                        majority: int) -> tuple[QuorumState, jax.Array]:
+    """Step 5 on a pre-packed uint32[W, WORDS_S] vote tile."""
+    vote_bits = state.vote_bits | packed
     counts = popcount_rows(vote_bits)
     committed = (counts >= majority) & (state.instance >= 0)
     newly = committed & ~state.decided
@@ -110,26 +126,70 @@ def absorb_votes(state: QuorumState, votes: jax.Array, *, majority: int)\
                           decided=state.decided | committed), newly
 
 
-@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority"))
-def engine_tick(state: QuorumState, acks: jax.Array, votes: jax.Array,
-                *, diss_majority: int, seq_majority: int)\
+def engine_tick_packed(state: QuorumState, packed_acks: jax.Array,
+                       packed_votes: jax.Array, *, diss_majority: int,
+                       seq_majority: int, order_budget: int | None = None)\
         -> tuple[QuorumState, dict]:
-    """One fused tick: absorb dissemination acks, stabilize, order, commit."""
-    state = absorb_acks(state, acks, majority=diss_majority)
-    state, assigned = assign_instances(state)
-    state, newly_decided = absorb_votes(state, votes, majority=seq_majority)
+    """One fused tick over packed tiles (the sharded engine's per-group
+    body; G=1 special case of ``repro.engine.sharded.sharded_tick``)."""
+    state = absorb_acks_packed(state, packed_acks, diss_majority)
+    state, assigned = assign_instances_core(state, order_budget)
+    state, newly_decided = absorb_votes_packed(state, packed_votes,
+                                               seq_majority)
     return state, {"assigned": assigned, "newly_decided": newly_decided}
 
 
+# -- public single-group API (bool-tile interface, unchanged) -----------------
+
+@functools.partial(jax.jit, static_argnames=("majority",))
+def absorb_acks(state: QuorumState, acks: jax.Array, *, majority: int)\
+        -> QuorumState:
+    """Steps 1–3: OR in a dense ack tile and refresh stability flags."""
+    return absorb_acks_packed(state, pack_tile(acks), majority)
+
+
+@functools.partial(jax.jit, static_argnames=("order_budget",))
+def assign_instances(state: QuorumState, *, order_budget: int | None = None)\
+        -> tuple[QuorumState, jax.Array]:
+    """Step 4: leader assigns consecutive instances to newly-stable ids.
+
+    Returns (state, assigned) where assigned[i] is the instance given to
+    slot i this call or -1."""
+    return assign_instances_core(state, order_budget)
+
+
+@functools.partial(jax.jit, static_argnames=("majority",))
+def absorb_votes(state: QuorumState, votes: jax.Array, *, majority: int)\
+        -> tuple[QuorumState, jax.Array]:
+    """Step 5: classical-Paxos phase-2b commit — same quorum primitive over
+    sequencer bitsets. Returns (state, newly_decided mask)."""
+    return absorb_votes_packed(state, pack_tile(votes), majority)
+
+
+@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
+                                             "order_budget"))
+def engine_tick(state: QuorumState, acks: jax.Array, votes: jax.Array,
+                *, diss_majority: int, seq_majority: int,
+                order_budget: int | None = None)\
+        -> tuple[QuorumState, dict]:
+    """One fused tick: absorb dissemination acks, stabilize, order, commit."""
+    return engine_tick_packed(state, pack_tile(acks), pack_tile(votes),
+                              diss_majority=diss_majority,
+                              seq_majority=seq_majority,
+                              order_budget=order_budget)
+
+
 def run_ticks(state: QuorumState, acks_seq: jax.Array, votes_seq: jax.Array,
-              *, diss_majority: int, seq_majority: int)\
+              *, diss_majority: int, seq_majority: int,
+              order_budget: int | None = None)\
         -> tuple[QuorumState, dict]:
     """lax.scan over T ticks of [T, W, D] / [T, W, S] traffic (throughput
     benchmark path — the whole protocol window advances per tick)."""
     def body(st, tv):
         a, v = tv
         st, out = engine_tick(st, a, v, diss_majority=diss_majority,
-                              seq_majority=seq_majority)
+                              seq_majority=seq_majority,
+                              order_budget=order_budget)
         return st, out
     return jax.lax.scan(body, state, (acks_seq, votes_seq))
 

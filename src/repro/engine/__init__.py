@@ -1,0 +1,39 @@
+"""Multi-group sharded ordering engine (Multi-Ring-style, PAPERS.md [27]).
+
+HT-Paxos splits dissemination from ordering, but a single sequencer group
+is still the ordering bottleneck at data-center scale (§5.1): its leader
+can assign at most pipeline_depth × order_batch_max instances per flush.
+This package shards the ordering layer across G independent quorum windows
+(``sharded``), hash-partitions batch_ids to groups (``router``), and
+deterministically merges the G per-group orders into the single total
+order learners consume (``merge`` — round-robin with explicit skip/null
+instances so a slow group cannot stall the merged log unboundedly).
+
+``router`` is jax-free and imported eagerly (the pure-python DES uses it);
+``merge``/``sharded`` pull in jax and are loaded lazily (PEP 562) so DES
+imports stay lightweight.
+"""
+from .router import partition_ids, route_id, route_ids
+
+_LAZY = {
+    "MergeState": "merge", "PAD": "merge", "SKIP": "merge",
+    "append_entries": "merge", "committed_prefix_len": "merge",
+    "entries_from_assigned": "merge", "init_merge": "merge",
+    "mergeable_counts": "merge", "merged_prefix": "merge",
+    "oracle_merge": "merge",
+    "init_sharded": "sharded", "run_sharded_ticks": "sharded",
+    "run_sharded_ticks_merged": "sharded", "sharded_tick": "sharded",
+    "sharded_tick_dense": "sharded",
+}
+
+__all__ = ["partition_ids", "route_id", "route_ids", *_LAZY]
+
+
+def __getattr__(name):
+    modname = "merge" if name == "merge" else \
+        "sharded" if name == "sharded" else _LAZY.get(name)
+    if modname is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    mod = importlib.import_module(f".{modname}", __name__)
+    return mod if name == modname else getattr(mod, name)

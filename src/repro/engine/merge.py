@@ -1,0 +1,192 @@
+"""Deterministic round-robin merge of G per-group ordered logs.
+
+Multi-Ring Paxos' merge function (PAPERS.md [27]) as a pure ``jax.lax``
+computation: each ordering group appends its decided ids to a per-group
+log; a learner consumes the logs round-robin — round r yields group 0's
+r-th entry, then group 1's, ... — which is a *deterministic* interleaving,
+so every learner that runs the merge over the same logs derives the same
+total order (no cross-group coordination).
+
+Two liveness refinements from the paper carry over:
+
+  * **watermarks** — merge only emits the maximal prefix for which every
+    earlier round-robin position is present, so a lagging group blocks
+    *later* output but never corrupts order;
+  * **explicit skip instances** — an idle group appends ``SKIP`` tokens
+    (Multi-Ring's skip messages) that hold a round-robin position but are
+    dropped from the merged output, so a slow/idle group cannot stall the
+    merged log unboundedly.
+
+Everything is fixed-shape and jit/scan-safe: logs are ``int32[G, L]``
+ring-less append buffers with per-group ``watermarks``; the merged prefix
+is returned padded with ``PAD``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SKIP = -2   # explicit null instance: holds a round-robin slot, never emitted
+PAD = -1    # padding in fixed-shape outputs / unwritten log tail
+
+
+class MergeState(NamedTuple):
+    """Per-group ordered logs plus append watermarks."""
+    logs: jax.Array        # int32[G, L] — entries; tail beyond watermark=PAD
+    watermarks: jax.Array  # int32[G]    — appended entries per group
+
+
+def init_merge(groups: int, capacity: int) -> MergeState:
+    return MergeState(
+        logs=jnp.full((groups, capacity), PAD, jnp.int32),
+        watermarks=jnp.zeros((groups,), jnp.int32),
+    )
+
+
+def append_entries(state: MergeState, entries: jax.Array,
+                   counts: jax.Array) -> MergeState:
+    """Append ``entries[g, :counts[g]]`` to group g's log at its watermark.
+
+    entries: int32[G, K]; counts: int32[G] (0 ≤ counts ≤ K). Pure lax —
+    overflow beyond capacity is silently dropped (size logs for the run).
+    """
+    G, L = state.logs.shape
+    K = entries.shape[1]
+    j = jnp.arange(L, dtype=jnp.int32)[None, :]                  # [1, L]
+    rel = j - state.watermarks[:, None]                          # [G, L]
+    take = (rel >= 0) & (rel < counts[:, None])
+    gathered = jnp.take_along_axis(
+        entries, jnp.clip(rel, 0, K - 1), axis=1)
+    logs = jnp.where(take, gathered, state.logs)
+    return MergeState(logs=logs,
+                      watermarks=state.watermarks + counts.astype(jnp.int32))
+
+
+def mergeable_counts(watermarks: jax.Array) -> jax.Array:
+    """Per-group count of entries inside the maximal merged prefix.
+
+    Entry (g, i) sits at round-robin position i·G + g; it is emittable iff
+    it and every earlier position exist: watermark[g'] ≥ i+1 for g' ≤ g and
+    watermark[g'] ≥ i for g' > g. Hence count[g] =
+    min(min(wm[0..g]), min(wm[g+1..]) + 1).
+    """
+    big = jnp.iinfo(jnp.int32).max
+    prefix_min = jax.lax.cummin(watermarks)
+    suffix_min = jax.lax.cummin(watermarks[::-1])[::-1]
+    suffix_after = jnp.concatenate(
+        [suffix_min[1:], jnp.array([big], watermarks.dtype)])
+    return jnp.minimum(prefix_min, jnp.minimum(suffix_after, big - 1) + 1)
+
+
+def merged_prefix(state: MergeState) -> tuple[jax.Array, jax.Array]:
+    """Maximal merged prefix: (out int32[G·L] padded with PAD, count).
+
+    Skip tokens are dropped (and do not count); order is round-robin
+    position order. Idempotent and monotone in the watermarks — appending
+    more entries only extends the previously returned prefix.
+    """
+    G, L = state.logs.shape
+    counts = mergeable_counts(state.watermarks)                  # [G]
+    flat = state.logs.T.reshape(-1)                              # pos = i·G+g
+    i_of = jnp.arange(G * L, dtype=jnp.int32) // G
+    g_of = jnp.arange(G * L, dtype=jnp.int32) % G
+    emit = i_of < counts[g_of]
+    keep = emit & (flat != SKIP)
+    out_idx = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    out = jnp.full((G * L,), PAD, jnp.int32)
+    out = out.at[jnp.where(keep, out_idx, G * L)].set(flat, mode="drop")
+    return out, jnp.sum(keep, dtype=jnp.int32)
+
+
+def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
+                          max_entries: int)\
+        -> tuple[jax.Array, jax.Array]:
+    """Turn one sharded tick's ``assigned`` output into merge entries.
+
+    assigned: int32[G, W] (per-slot instance assigned this tick, -1 = none);
+    slot_ids: int32[G, W] global id of each slot. Returns
+    (entries int32[G, max_entries], counts int32[G]) where each group's
+    entries are its newly ordered ids in instance order, padded to the
+    *per-tick maximum* with SKIP — the explicit null instances that keep
+    round-robin positions aligned so an idle group never stalls the merge.
+
+    ``max_entries`` must be ≥ the per-tick assignment count (the engine's
+    order budget guarantees this); counts are clamped to ``max_entries``
+    so an undersized buffer truncates (drops ids) rather than duplicating
+    the last kept entry into phantom log positions.
+    """
+    mask = assigned >= 0                                         # [G, W]
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1         # [G, W]
+    n_assigned = jnp.sum(mask, axis=1, dtype=jnp.int32)          # [G]
+    entries = jnp.full((assigned.shape[0], max_entries), SKIP, jnp.int32)
+    entries = jax.vmap(
+        lambda e, p, m, ids: e.at[jnp.where(m, p, max_entries)].set(
+            ids, mode="drop"))(entries, pos, mask, slot_ids.astype(jnp.int32))
+    counts = jnp.broadcast_to(
+        jnp.minimum(jnp.max(n_assigned), max_entries), n_assigned.shape)
+    return entries, counts
+
+
+def committed_prefix_len(state: MergeState,
+                         decided_by_instance: jax.Array) -> jax.Array:
+    """Length of the merged prefix a state machine may *consume*.
+
+    The merged order is defined at assignment time (instance order per
+    group), but SMR safety only allows executing entries whose underlying
+    instance reached the phase-2b commit quorum. Given
+    ``decided_by_instance`` bool[G, C] (instance k of group g committed),
+    returns the count of leading emitted entries of ``merged_prefix`` that
+    are all committed — consumption stops at the first uncommitted entry;
+    skip tokens commit nothing and never block.
+    """
+    G, L = state.logs.shape
+    C = decided_by_instance.shape[1]
+    in_log = jnp.arange(L, dtype=jnp.int32)[None, :] < \
+        state.watermarks[:, None]
+    nonskip = (state.logs != SKIP) & in_log
+    rank = jnp.cumsum(nonskip.astype(jnp.int32), axis=1) - 1   # instance idx
+    ent_dec = jnp.where(
+        nonskip,
+        jnp.take_along_axis(decided_by_instance,
+                            jnp.clip(rank, 0, C - 1), axis=1),
+        True)                                                  # skips: free
+    counts = mergeable_counts(state.watermarks)
+    i_of = jnp.arange(G * L, dtype=jnp.int32) // G
+    g_of = jnp.arange(G * L, dtype=jnp.int32) % G
+    emit = i_of < counts[g_of]
+    flat = state.logs.T.reshape(-1)
+    keep = emit & (flat != SKIP)
+    dec = ent_dec.T.reshape(-1)
+    # barrier: all-committed so far, in round-robin position order
+    barrier = jnp.cumprod(jnp.where(emit, dec, True).astype(jnp.int32))
+    return jnp.sum((keep & (barrier > 0)).astype(jnp.int32))
+
+
+# -- pure-python oracle (property-test target) --------------------------------
+
+def oracle_merge(group_logs: list[list[int]]) -> list[int]:
+    """Reference merge: strict round-robin over rounds, stop at the first
+    missing entry, drop SKIP tokens."""
+    out: list[int] = []
+    r = 0
+    while True:
+        for g in range(len(group_logs)):
+            if r >= len(group_logs[g]):
+                return out
+            e = group_logs[g][r]
+            if e != SKIP:
+                out.append(int(e))
+        r += 1
+
+
+def oracle_is_legal_interleaving(merged: list, group_orders: list[list])\
+        -> bool:
+    """True iff ``merged`` is a legal interleaving of the per-group orders:
+    its restriction to each group's ids equals a prefix of that group's
+    order, and it contains no foreign ids. (Canonical checker lives in
+    ``repro.core.invariants``; shared with the DES audit.)"""
+    from ..core.invariants import check_legal_interleaving
+    return not check_legal_interleaving(merged, group_orders)

@@ -1,0 +1,47 @@
+"""Hash-partitioning of batch_ids onto ordering groups.
+
+The dissemination layer stays global (any disseminator serves any client);
+only the *ordering* of a batch_id is owned by one group, chosen by a
+stable hash so every node routes identically with no coordination. Two
+entry points for the two layers of the reproduction:
+
+  * ``route_id``  — python-level, for the DES (batch_ids are tuples);
+  * ``route_ids`` — vectorized, for the jax engine (uint32 id arrays),
+    using Knuth's multiplicative hash so consecutive ids spread evenly.
+
+The two are *different* hash functions (crc32-of-repr vs multiplicative);
+each is deterministic and stable on its own side, but an id routed through
+both will generally land in different groups — when cross-validating the
+DES against the engine, route both sides with ``route_id``.
+"""
+from __future__ import annotations
+
+import zlib
+
+_KNUTH = 2654435761  # 2^32 / golden ratio
+
+
+def route_id(bid, groups: int) -> int:
+    """Stable group of a python-level batch_id (any reprable value)."""
+    if groups <= 1:
+        return 0
+    return zlib.crc32(repr(bid).encode()) % groups
+
+
+def route_ids(ids, groups: int):
+    """uint32[N] → int32[N] group of each id (vectorized, jit-safe).
+
+    jnp is imported lazily so the pure-python DES path (which only needs
+    ``route_id``) never pulls in jax."""
+    import jax.numpy as jnp
+    h = (ids.astype(jnp.uint32) * jnp.uint32(_KNUTH)) >> jnp.uint32(16)
+    return (h % jnp.uint32(groups)).astype(jnp.int32)
+
+
+def partition_ids(bids, groups: int) -> list[list]:
+    """Split an iterable of python batch_ids into per-group lists,
+    preserving relative order within each group."""
+    out: list[list] = [[] for _ in range(groups)]
+    for bid in bids:
+        out[route_id(bid, groups)].append(bid)
+    return out

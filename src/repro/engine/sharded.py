@@ -1,0 +1,151 @@
+"""G independent quorum/ordering windows batched along a leading group axis.
+
+Each group runs exactly the single-group machinery of
+``repro.core.jaxsim`` (its un-jitted packed cores) — ``jax.vmap`` along a
+new leading ``G`` axis turns the G per-group ticks into one fused XLA
+computation over ``uint32[G, W, WORDS]`` bitsets, and
+``repro.kernels.quorum.quorum_update_grouped`` is the matching 2-D-grid
+Pallas kernel for the absorb/stabilize step. G=1 is bit-identical to
+``jaxsim.engine_tick`` by construction (same core functions, vmapped over
+a singleton axis).
+
+Why sharding multiplies throughput (§5.1, Multi-Ring): each group has its
+*own* leader whose ordering rate is bounded per tick
+(``order_budget`` ≈ pipeline_depth × order_batch_max of classic.py), so at
+equal total window G groups drain a backlog G× faster. The per-group
+orders are merged into the single learner-facing total order by
+``repro.engine.merge`` (deterministic round-robin with explicit skips).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import jaxsim
+from ..core.jaxsim import QuorumState
+from . import merge as merge_mod
+
+
+def init_sharded(groups: int, window: int, n_diss: int, n_seq: int)\
+        -> QuorumState:
+    """QuorumState pytree with a leading group axis: uint32[G, W, WORDS]."""
+    single = jaxsim.init_state(window, n_diss, n_seq)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (groups,) + x.shape), single)
+
+
+def default_slot_ids(groups: int, window: int) -> jax.Array:
+    """Global id of slot (g, w): g·W + w (int32[G, W])."""
+    return (jnp.arange(groups, dtype=jnp.int32)[:, None] * window
+            + jnp.arange(window, dtype=jnp.int32)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
+                                             "order_budget"))
+def sharded_tick(state: QuorumState, packed_acks: jax.Array,
+                 packed_votes: jax.Array, *, diss_majority: int,
+                 seq_majority: int, order_budget: int | None = None)\
+        -> tuple[QuorumState, dict]:
+    """One fused tick of all G groups over packed uint32 tiles.
+
+    state: leading-G QuorumState; packed_acks: uint32[G, W, WORDS_D];
+    packed_votes: uint32[G, W, WORDS_S]. Returns (state, out) with
+    out["assigned"] int32[G, W] / out["newly_decided"] bool[G, W].
+    """
+    body = functools.partial(jaxsim.engine_tick_packed,
+                             diss_majority=diss_majority,
+                             seq_majority=seq_majority,
+                             order_budget=order_budget)
+    return jax.vmap(body)(state, packed_acks, packed_votes)
+
+
+@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
+                                             "order_budget"))
+def sharded_tick_dense(state: QuorumState, acks: jax.Array,
+                       votes: jax.Array, *, diss_majority: int,
+                       seq_majority: int, order_budget: int | None = None)\
+        -> tuple[QuorumState, dict]:
+    """Bool-tile convenience wrapper (acks bool[G, W, D], votes
+    bool[G, W, S]) — the interface of ``jaxsim.engine_tick`` with a group
+    axis, used by the G=1 bit-identity regression tests."""
+    return sharded_tick(state, jax.vmap(jaxsim.pack_tile)(acks),
+                        jax.vmap(jaxsim.pack_tile)(votes),
+                        diss_majority=diss_majority,
+                        seq_majority=seq_majority,
+                        order_budget=order_budget)
+
+
+def run_sharded_ticks(state: QuorumState, packed_acks_seq: jax.Array,
+                      packed_votes_seq: jax.Array, *, diss_majority: int,
+                      seq_majority: int, order_budget: int | None = None)\
+        -> tuple[QuorumState, dict]:
+    """lax.scan over T fused ticks of [T, G, W, WORDS] packed traffic."""
+    body_fn = functools.partial(jaxsim.engine_tick_packed,
+                                diss_majority=diss_majority,
+                                seq_majority=seq_majority,
+                                order_budget=order_budget)
+    vtick = jax.vmap(body_fn)
+
+    def body(st, tv):
+        a, v = tv
+        return vtick(st, a, v)
+    return jax.lax.scan(body, state, (packed_acks_seq, packed_votes_seq))
+
+
+@functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
+                                             "order_budget", "max_entries"))
+def run_sharded_ticks_merged(state: QuorumState, merge_state,
+                             packed_acks_seq: jax.Array,
+                             packed_votes_seq: jax.Array,
+                             slot_ids: jax.Array, *, diss_majority: int,
+                             seq_majority: int, order_budget: int,
+                             max_entries: int | None = None)\
+        -> tuple[QuorumState, "merge_mod.MergeState", jax.Array, jax.Array,
+                 jax.Array]:
+    """Fused hot loop: tick all groups AND feed the deterministic merge.
+
+    Per tick, each group's newly assigned ids (in instance order) are
+    appended to its merge log, padded to the per-tick maximum with SKIP
+    tokens so a slow group cannot stall the merged prefix. Returns
+    (final engine state, final merge state, merged int32[G·L] padded,
+    merged_count, committed_count): ``merged[:merged_count]`` is the
+    single total *order* across all groups (defined at assignment time);
+    only ``merged[:committed_count]`` — the leading entries whose
+    instances reached the phase-2b commit quorum — may be consumed by the
+    state machine.
+    """
+    if max_entries is None:
+        max_entries = order_budget
+    assert max_entries >= order_budget, (
+        f"max_entries={max_entries} < order_budget={order_budget}: a tick "
+        "could assign more ids than the merge buffer holds, silently "
+        "corrupting the merged log")
+    body_fn = functools.partial(jaxsim.engine_tick_packed,
+                                diss_majority=diss_majority,
+                                seq_majority=seq_majority,
+                                order_budget=order_budget)
+    vtick = jax.vmap(body_fn)
+
+    def body(carry, tv):
+        st, ms = carry
+        a, v = tv
+        st, out = vtick(st, a, v)
+        entries, counts = merge_mod.entries_from_assigned(
+            out["assigned"], slot_ids, max_entries)
+        ms = merge_mod.append_entries(ms, entries, counts)
+        return (st, ms), ()
+
+    (state, merge_state), _ = jax.lax.scan(
+        body, (state, merge_state), (packed_acks_seq, packed_votes_seq))
+    merged, count = merge_mod.merged_prefix(merge_state)
+    # commit gate: instance k of group g is consumable once its slot's 2b
+    # quorum is in — scatter per-slot decided flags into instance order
+    C = merge_state.logs.shape[1]
+    dec_by_inst = jax.vmap(
+        lambda inst, dec: jnp.zeros((C,), jnp.bool_).at[
+            jnp.where(inst >= 0, inst, C)].set(dec, mode="drop"))(
+        state.instance, state.decided)
+    committed = merge_mod.committed_prefix_len(merge_state, dec_by_inst)
+    return state, merge_state, merged, count, committed

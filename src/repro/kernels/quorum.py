@@ -29,12 +29,14 @@ DEFAULT_BLOCK_W = 256
 def _quorum_kernel(bits_ref, update_ref, stable_in_ref,
                    bits_out_ref, counts_ref, stable_out_ref,
                    *, majority: int):
+    # shared by the 1-D ([BLOCK_W, WORDS]) and 2-D grouped
+    # ([1, BLOCK_W, WORDS]) grids: words are always the last axis.
     bits = bits_ref[...]
     upd = update_ref[...]
     new = bits | upd
     bits_out_ref[...] = new
     counts = jnp.sum(jax.lax.population_count(new).astype(jnp.int32),
-                     axis=1)
+                     axis=-1)
     counts_ref[...] = counts
     stable_out_ref[...] = stable_in_ref[...] | (counts >= majority)
 
@@ -71,6 +73,47 @@ def quorum_update(bits: jax.Array, update: jax.Array, stable: jax.Array,
             jax.ShapeDtypeStruct((W, WORDS), jnp.uint32),
             jax.ShapeDtypeStruct((W,), jnp.int32),
             jax.ShapeDtypeStruct((W,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(bits, update, stable)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("majority", "block_w", "interpret"))
+def quorum_update_grouped(bits: jax.Array, update: jax.Array,
+                          stable: jax.Array, *, majority: int,
+                          block_w: int = DEFAULT_BLOCK_W,
+                          interpret: bool = True):
+    """Multi-group extension: bits/update uint32[G, W, WORDS], stable
+    bool[G, W] — one launch ticks every ordering group of the sharded
+    engine (``repro.engine.sharded``) on a 2-D (group, window-block) grid.
+    Returns (new_bits, counts int32[G, W], new_stable bool[G, W]).
+
+    The group axis maps to the leading grid dimension so each group's
+    window blocks stay contiguous in VMEM; the kernel body is shared with
+    the single-group launch (word lanes are the last axis either way)."""
+    G, W, WORDS = bits.shape
+    block_w = min(block_w, W)
+    assert W % block_w == 0, (W, block_w)
+    grid = (G, W // block_w)
+    kernel = functools.partial(_quorum_kernel, majority=majority)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_w, WORDS), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, block_w, WORDS), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, block_w), lambda g, i: (g, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_w, WORDS), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, block_w), lambda g, i: (g, i)),
+            pl.BlockSpec((1, block_w), lambda g, i: (g, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, W, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((G, W), jnp.int32),
+            jax.ShapeDtypeStruct((G, W), jnp.bool_),
         ],
         interpret=interpret,
     )(bits, update, stable)

@@ -15,7 +15,16 @@ Commands:
   SCALE(n_pods)       — elastic membership change (reconfiguration rides
                         the ordered log, so every pod switches at the same
                         step boundary)
-  NOOP                — gap filler after leader failover
+  NOOP                — gap filler after leader failover, and the explicit
+                        skip instance of an idle ordering group
+
+With the sharded ordering engine (``repro.engine``), G sequencer groups
+decide commands independently; ``MergedCommandLog`` is the learner-side
+adapter that merges the per-group decision streams into the single total
+order a pod applies — deterministic round-robin over per-group instance
+cursors, NOOP/skip instances advancing the ring without touching training
+state — and audits that the merged order is a legal interleaving of the
+per-group orders.
 """
 from __future__ import annotations
 
@@ -49,6 +58,67 @@ def tree_digest(tree) -> str:
     for leaf in leaves:
         h.update(np.asarray(leaf).tobytes())
     return h.hexdigest()[:16]
+
+
+class MergedCommandLog:
+    """Multiple sequencer groups feeding one learner log.
+
+    ``feed(group, instance, cmd)`` records group-local decisions (in any
+    arrival order); the deterministic round-robin merge applies commands to
+    the attached state machine as soon as the next (group, cursor) instance
+    is available. Two pods fed the same per-group decisions — in *any*
+    interleaving of feed calls — apply the identical merged command
+    sequence, which is what keeps replica training state bitwise equal.
+    """
+
+    def __init__(self, groups: int,
+                 apply: Optional[Callable[[Command], None]] = None) -> None:
+        self.groups = groups
+        self.apply_fn = apply
+        self.logs: list[dict] = [dict() for _ in range(groups)]
+        self.cursors = [0] * groups
+        self.ring = 0
+        self.merged: list[tuple] = []        # merged encoded commands
+        self.merged_groups: list[int] = []   # owning group per merged entry
+
+    def feed(self, group: int, instance: int, cmd: Command) -> None:
+        prev = self.logs[group].get(instance)
+        if prev is not None and prev != cmd.encode():
+            raise AssertionError(
+                f"ordering safety violation: group {group} instance "
+                f"{instance} decided twice with different commands "
+                f"({prev} vs {cmd.encode()})")
+        self.logs[group][instance] = cmd.encode()
+        self._drain()
+
+    def _drain(self) -> None:
+        while True:
+            g = self.ring
+            enc = self.logs[g].get(self.cursors[g])
+            if enc is None:
+                return
+            cmd = Command.decode(enc)
+            self.merged.append(enc)
+            self.merged_groups.append(g)
+            if self.apply_fn is not None and cmd.kind != "NOOP":
+                self.apply_fn(cmd)
+            self.cursors[g] += 1
+            self.ring = (g + 1) % self.groups
+
+    def audit(self) -> list:
+        """Check the merged log is a legal interleaving of the per-group
+        instance orders (repro.core.invariants). Entries are disambiguated
+        by (group, instance) so identical commands in different groups
+        don't alias. Returns violations (empty = invariant holds)."""
+        from ..core.invariants import check_legal_interleaving
+        orders = [[(g, i) for i in sorted(self.logs[g])]
+                  for g in range(self.groups)]
+        tagged = []
+        cursors = [0] * self.groups
+        for g in self.merged_groups:
+            tagged.append((g, cursors[g]))    # drain consumes 0,1,2,... per g
+            cursors[g] += 1
+        return check_legal_interleaving(tagged, orders)
 
 
 class TrainerStateMachine:

@@ -1,0 +1,81 @@
+"""``hypothesis`` if installed, else a tiny deterministic stand-in.
+
+The seed suite hard-imported hypothesis and the whole tier-1 run died at
+collection when it was absent. Import ``given``/``settings``/``st`` from
+here instead: with hypothesis present you get the real thing; without it,
+property tests still run as seeded regressions — each test is executed
+``max_examples`` times with draws from a numpy RNG keyed on the test name
+(deterministic across runs, no shrinking, no database).
+
+Only the strategy surface the suite uses is emulated: integers, floats,
+booleans, sampled_from, lists.
+"""
+from __future__ import annotations
+
+
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # note: no functools.wraps — pytest must see a zero-arg
+            # signature, not the original draw parameters (fixtures!)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,13 +1,14 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp
-oracle, swept over shapes and dtypes, plus hypothesis property tests on
-the quorum engine's invariants."""
+oracle, swept over shapes and dtypes, plus property tests on the quorum
+engine's invariants (hypothesis when installed, deterministic seeded
+draws otherwise — see _hypothesis_compat)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import jaxsim
 from repro.kernels import ref

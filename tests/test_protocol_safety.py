@@ -9,7 +9,7 @@ test_protocol_progress's job under bounded fault rates)."""
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.htpaxos import HTConfig, HTPaxosSim
 from repro.core.invariants import audit, issued_requests

@@ -24,11 +24,12 @@ def test_training_service_end_to_end(tmp_path):
 
     svc = TrainingService(
         ServiceConfig(n_pods=2, ckpt_dir=str(tmp_path)), step, init_state)
-    key = jax.random.PRNGKey(0)
+    # a fixed batch re-submitted as 4 distinct SMR commands: the ordered
+    # log still carries 4 STEP entries, and memorizing one batch gives a
+    # real (non-noise) training signal for the loss-decrease check below
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (4, 32), 0, cfg.vocab)
     for _ in range(4):
-        key, k = jax.random.split(key)
-        svc.submit_command(svc.submit_batch(
-            {"tokens": jax.random.randint(k, (4, 32), 0, cfg.vocab)}))
+        svc.submit_command(svc.submit_batch({"tokens": tokens}))
     svc.run(until=500)
 
     # every pod applied the same ordered log and holds identical params
