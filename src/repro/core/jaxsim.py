@@ -35,6 +35,17 @@ construction.
 pipelining/batching caps), so a single group's ordering throughput is
 bounded per tick no matter how wide the window is. ``None`` keeps the
 legacy unbounded behavior (bit-identical to the seed engine).
+
+``compact_and_refill_packed`` is the window-recycling core (Ring Paxos'
+circular instance window, re-thought for dense tiles): it retires the
+contiguous *decided* prefix of the window in instance order, shifts the
+live slots down so slot (FIFO) order is preserved, and refills the freed
+tail with fresh slots carrying monotonically increasing ids. The retired
+count is the group's monotonic base offset: every instance below it is
+known-decided without keeping its slot around, which is what lets a
+long-running engine sustain throughput across unbounded window
+generations (see ``repro.engine.sharded`` for the multi-group wrapper and
+the merge-side commit-gate interaction).
 """
 from __future__ import annotations
 
@@ -137,6 +148,74 @@ def engine_tick_packed(state: QuorumState, packed_acks: jax.Array,
     state, newly_decided = absorb_votes_packed(state, packed_votes,
                                                seq_majority)
     return state, {"assigned": assigned, "newly_decided": newly_decided}
+
+
+def compact_and_refill_packed(state: QuorumState, slot_ids: jax.Array,
+                              retired: jax.Array, id_base: jax.Array,
+                              enable: jax.Array | None = None)\
+        -> tuple[QuorumState, jax.Array, jax.Array, jax.Array]:
+    """Window recycling: retire the decided instance prefix, compact, refill.
+
+    A slot is *retirable* once its instance lies below the group's
+    contiguous decided-instance frontier — every instance in
+    ``[retired, retired + adv)`` has a phase-2b quorum, so the slot's
+    bitsets carry no further information (its merge-log entry was appended
+    at assignment time; the commit gate recovers "decided" for retired
+    instances from the base offset alone, see
+    ``merge.committed_prefix_len(retired_base=...)``). Retired slots are
+    dropped, live slots shift down preserving slot (FIFO) order, and the
+    freed tail is refilled with fresh empty slots whose global ids continue
+    the group's monotone id sequence ``id_base + W + retired + k``.
+
+    Args (single group; ``repro.engine.sharded`` vmaps along G):
+      state:    QuorumState over a W-slot window.
+      slot_ids: int32[W] global id currently held by each slot.
+      retired:  int32[] total instances retired so far (monotonic base
+                offset; also the count of slots ever recycled).
+      id_base:  int32[] first global id of this group's id space; ids are
+                issued as ``id_base + local`` with local < the caller's
+                per-group id stride.
+      enable:   optional bool[] gate — False makes the call a bit-exact
+                no-op (the sharded watermark check).
+
+    Returns (state', slot_ids', retired', n_retired). ``next_instance`` is
+    untouched: instances stay globally monotone per group, so live
+    instances always span ``[retired', next_instance)``.
+    """
+    W = state.decided.shape[0]
+    valid = state.instance >= 0
+    rel = jnp.where(valid, state.instance - retired, W)
+    rel = jnp.where(rel < 0, W, rel)           # OOB-guard (invariant: never)
+    # decided flags in instance order relative to the base offset
+    dec_rel = jnp.zeros((W,), jnp.bool_).at[rel].set(
+        state.decided, mode="drop")
+    # frontier advance: leading run of decided instances
+    adv = jnp.sum(jnp.cumprod(dec_rel.astype(jnp.int32)), dtype=jnp.int32)
+    if enable is not None:
+        adv = jnp.where(enable, adv, 0)
+    retire = valid & (rel < adv)
+    keep = ~retire
+    dest = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    sidx = jnp.where(keep, dest, W)            # retired rows are dropped
+
+    def _compact(field, fill):
+        fresh = jnp.full_like(field, fill)
+        return fresh.at[sidx].set(field, mode="drop")
+
+    new_state = state._replace(
+        ack_bits=_compact(state.ack_bits, 0),
+        vote_bits=_compact(state.vote_bits, 0),
+        stable=_compact(state.stable, False),
+        instance=_compact(state.instance, -1),
+        decided=_compact(state.decided, False),
+    )
+    pos = jnp.arange(W, dtype=jnp.int32)
+    # fresh tail ids continue the monotone per-group sequence; positions
+    # below n_keep are fully overwritten by the kept-slot scatter
+    fresh_ids = (id_base + W + retired + (pos - n_keep)).astype(jnp.int32)
+    new_ids = fresh_ids.at[sidx].set(slot_ids, mode="drop")
+    return new_state, new_ids, retired + adv, adv
 
 
 # -- public single-group API (bool-tile interface, unchanged) -----------------

@@ -24,6 +24,10 @@ _LAZY = {
     "init_sharded": "sharded", "run_sharded_ticks": "sharded",
     "run_sharded_ticks_merged": "sharded", "sharded_tick": "sharded",
     "sharded_tick_dense": "sharded",
+    "RecycleState": "sharded", "init_recycled": "sharded",
+    "recycle_groups": "sharded", "recycled_tick_merged": "sharded",
+    "recycled_committed_prefix": "sharded",
+    "run_recycled_ticks_merged": "sharded",
 }
 
 __all__ = ["partition_ids", "route_id", "route_ids", *_LAZY]

@@ -117,6 +117,13 @@ def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
     order budget guarantees this); counts are clamped to ``max_entries``
     so an undersized buffer truncates (drops ids) rather than duplicating
     the last kept entry into phantom log positions.
+
+    Recycling note: ``slot_ids`` is a *mutable mapping* under window
+    recycling — the sharded engine passes its current per-tick slot→id map
+    (slots are compacted and refilled between ticks), which is why entries
+    snapshot the global id at assignment time. The SKIP-padding discipline
+    is unchanged: skip tokens are per-*position* round-robin fillers and
+    never refer to slots, so recycling cannot invalidate them.
     """
     mask = assigned >= 0                                         # [G, W]
     pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1         # [G, W]
@@ -131,7 +138,8 @@ def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
 
 
 def committed_prefix_len(state: MergeState,
-                         decided_by_instance: jax.Array) -> jax.Array:
+                         decided_by_instance: jax.Array,
+                         retired_base: jax.Array | None = None) -> jax.Array:
     """Length of the merged prefix a state machine may *consume*.
 
     The merged order is defined at assignment time (instance order per
@@ -141,9 +149,21 @@ def committed_prefix_len(state: MergeState,
     returns the count of leading emitted entries of ``merged_prefix`` that
     are all committed — consumption stops at the first uncommitted entry;
     skip tokens commit nothing and never block.
+
+    Window recycling (``jaxsim.compact_and_refill_packed``) retires slots
+    whose instances form the group's contiguous decided prefix, so a
+    recycled engine's live window no longer *contains* those instances.
+    ``retired_base`` int32[G] (the per-group monotonic base offset)
+    restores them: every instance below the base was decided by
+    construction at retirement time, so it is OR-ed into
+    ``decided_by_instance`` before the gate runs. ``None`` keeps the
+    non-recycled behavior bit-exactly.
     """
     G, L = state.logs.shape
     C = decided_by_instance.shape[1]
+    if retired_base is not None:
+        decided_by_instance = decided_by_instance | (
+            jnp.arange(C, dtype=jnp.int32)[None, :] < retired_base[:, None])
     in_log = jnp.arange(L, dtype=jnp.int32)[None, :] < \
         state.watermarks[:, None]
     nonskip = (state.logs != SKIP) & in_log

@@ -15,10 +15,24 @@ Why sharding multiplies throughput (§5.1, Multi-Ring): each group has its
 equal total window G groups drain a backlog G× faster. The per-group
 orders are merged into the single learner-facing total order by
 ``repro.engine.merge`` (deterministic round-robin with explicit skips).
+
+**Window recycling** (``RecycleState`` + the ``recycled_*`` family): the
+plain engine's slots are single-use — once a window's ids are decided,
+throughput collapses to zero until re-init, so only a cold burst is ever
+measured. The recycled engine wraps the same per-group cores with
+``jaxsim.compact_and_refill_packed``: whenever a group's free-slot count
+drops below a watermark, its contiguous decided instance prefix is
+retired, live slots shift down, and the freed tail is refilled with fresh
+slots carrying new monotone ids — so a long-running engine sustains
+ordering throughput across unbounded window generations. Recycling is
+pure host-side slot remapping around the quorum math: the grouped Pallas
+kernel (``repro.kernels.quorum.quorum_update_grouped``) sees only dense
+``uint32[G, W, WORDS]`` tiles and stays completely oblivious to it.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +108,23 @@ def run_sharded_ticks(state: QuorumState, packed_acks_seq: jax.Array,
     return jax.lax.scan(body, state, (packed_acks_seq, packed_votes_seq))
 
 
+def _resolve_max_entries(max_entries: int | None,
+                         order_budget: int) -> int:
+    """Default and validate the per-tick merge buffer width. Raises (not
+    assert: the failure mode is silent merged-log corruption that
+    desynchronizes the commit gate's instance ranks, which must not be
+    compiled out under ``python -O``)."""
+    if max_entries is None:
+        return order_budget
+    if max_entries < order_budget:
+        raise ValueError(
+            f"max_entries={max_entries} < order_budget={order_budget}: a "
+            "tick could assign more ids than the merge buffer holds — "
+            "truncated entries desynchronize the commit gate's instance "
+            "ranks and can let it consume uncommitted ids")
+    return max_entries
+
+
 @functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
                                              "order_budget", "max_entries"))
 def run_sharded_ticks_merged(state: QuorumState, merge_state,
@@ -116,12 +147,7 @@ def run_sharded_ticks_merged(state: QuorumState, merge_state,
     instances reached the phase-2b commit quorum — may be consumed by the
     state machine.
     """
-    if max_entries is None:
-        max_entries = order_budget
-    assert max_entries >= order_budget, (
-        f"max_entries={max_entries} < order_budget={order_budget}: a tick "
-        "could assign more ids than the merge buffer holds, silently "
-        "corrupting the merged log")
+    max_entries = _resolve_max_entries(max_entries, order_budget)
     body_fn = functools.partial(jaxsim.engine_tick_packed,
                                 diss_majority=diss_majority,
                                 seq_majority=seq_majority,
@@ -142,10 +168,208 @@ def run_sharded_ticks_merged(state: QuorumState, merge_state,
     merged, count = merge_mod.merged_prefix(merge_state)
     # commit gate: instance k of group g is consumable once its slot's 2b
     # quorum is in — scatter per-slot decided flags into instance order
-    C = merge_state.logs.shape[1]
-    dec_by_inst = jax.vmap(
-        lambda inst, dec: jnp.zeros((C,), jnp.bool_).at[
-            jnp.where(inst >= 0, inst, C)].set(dec, mode="drop"))(
-        state.instance, state.decided)
+    dec_by_inst = _decided_by_instance(state.instance, state.decided,
+                                       merge_state.logs.shape[1])
     committed = merge_mod.committed_prefix_len(merge_state, dec_by_inst)
     return state, merge_state, merged, count, committed
+
+
+def _decided_by_instance(instance: jax.Array, decided: jax.Array,
+                         capacity: int) -> jax.Array:
+    """Scatter per-slot decided flags into instance order: bool[G, C] with
+    entry (g, k) True iff instance k of group g is decided *in the live
+    window* (retired instances are the caller's business — see
+    ``committed_prefix_len(retired_base=...)``)."""
+    return jax.vmap(
+        lambda inst, dec: jnp.zeros((capacity,), jnp.bool_).at[
+            jnp.where(inst >= 0, inst, capacity)].set(dec, mode="drop"))(
+        instance, decided)
+
+
+# -- window recycling ---------------------------------------------------------
+
+class RecycleState(NamedTuple):
+    """Sharded engine state plus the recycling bookkeeping.
+
+    ``q`` is the leading-G :class:`QuorumState` (exactly what the plain
+    sharded engine ticks — the quorum math and the Pallas kernel never see
+    the recycling); ``slot_ids`` maps slot (g, w) to the global id it
+    currently holds; ``retired`` is each group's monotonic base offset:
+    the count of instances (== slots) retired so far, below which every
+    instance is known-decided."""
+    q: QuorumState          # leading-G pytree
+    slot_ids: jax.Array     # int32[G, W]
+    retired: jax.Array      # int32[G]
+
+
+def init_recycled(groups: int, window: int, n_diss: int, n_seq: int,
+                  *, id_stride: int | None = None) -> RecycleState:
+    """Fresh recycled engine. Group g owns the id range
+    ``[g·id_stride, (g+1)·id_stride)``; ids are issued monotonically from
+    the bottom of the range as slots are recycled, so ``id_stride`` must
+    exceed the total ids a group will ever admit (``W + retired`` grows
+    without bound and is never range-checked on the jit path — an
+    undersized stride silently collides with the next group's ids).
+    With a single group there is no next group, so ``None`` defaults to
+    ``window`` (ids are monotone within the group and never reused);
+    with G > 1 the stride bounds the run length, so it must be explicit.
+    """
+    if id_stride is None:
+        if groups > 1:
+            raise ValueError(
+                "init_recycled(groups>1) needs an explicit id_stride: "
+                "recycling issues fresh ids past g*id_stride + window, so "
+                "a defaulted stride of `window` would collide with the "
+                "next group's id range at the first recycle")
+        id_stride = window
+    ids = (jnp.arange(groups, dtype=jnp.int32)[:, None] * id_stride
+           + jnp.arange(window, dtype=jnp.int32)[None, :])
+    return RecycleState(q=init_sharded(groups, window, n_diss, n_seq),
+                        slot_ids=ids,
+                        retired=jnp.zeros((groups,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("watermark", "id_stride"))
+def recycle_groups(rs: RecycleState, *, watermark: int, id_stride: int)\
+        -> tuple[RecycleState, jax.Array]:
+    """Per-group watermark-gated compaction/refill (one fused vmap).
+
+    A group recycles only when its free-slot count — slots still doing
+    useful work, i.e. not yet decided — drops below ``watermark`` AND its
+    frontier head (the slot holding instance ``retired``) is decided, so
+    something would actually retire; the check gates
+    ``jaxsim.compact_and_refill_packed`` per group, so busy groups
+    amortize the compaction shuffle over many ticks while idle groups are
+    bit-exact no-ops. Ticks where no group passes both gates skip the
+    compaction scatters entirely (``lax.cond``) — including the stalled
+    case where one undecided old instance pins the frontier — so the
+    amortization is real compute savings, not just a masked no-op.
+    Returns (state', n_retired int32[G]).
+    """
+    G = rs.slot_ids.shape[0]
+    free = jnp.sum(~rs.q.decided, axis=1, dtype=jnp.int32)
+    head_retirable = jnp.any(
+        (rs.q.instance == rs.retired[:, None]) & rs.q.decided, axis=1)
+    enable = (free < watermark) & head_retirable
+    id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+
+    def compact(rs):
+        q, ids, retired, n_ret = jax.vmap(jaxsim.compact_and_refill_packed)(
+            rs.q, rs.slot_ids, rs.retired, id_base, enable)
+        return RecycleState(q=q, slot_ids=ids, retired=retired), n_ret
+
+    def skip(rs):
+        return rs, jnp.zeros((G,), jnp.int32)
+
+    return jax.lax.cond(jnp.any(enable), compact, skip, rs)
+
+
+def recycled_committed_prefix(rs: RecycleState,
+                              merge_state: "merge_mod.MergeState")\
+        -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(merged int32[G·L] padded, merged_count, committed_count) for a
+    recycled engine: the commit gate recovers decided flags of retired
+    instances from the base offset (``committed_prefix_len`` with
+    ``retired_base``) and of live instances from the window."""
+    live = _decided_by_instance(rs.q.instance, rs.q.decided,
+                                merge_state.logs.shape[1])
+    merged, count = merge_mod.merged_prefix(merge_state)
+    committed = merge_mod.committed_prefix_len(merge_state, live,
+                                               retired_base=rs.retired)
+    return merged, count, committed
+
+
+def _recycled_body(rs: RecycleState, merge_state, packed_acks, packed_votes,
+                   *, diss_majority, seq_majority, order_budget, max_entries,
+                   watermark, id_stride):
+    """One sustained-engine step: tick → append to merge → recycle.
+
+    Ordering matters: entries must reach the merge log *before* their
+    slots can be retired (a decided slot's log entry is what the commit
+    gate consumes once the slot is gone)."""
+    vtick = jax.vmap(functools.partial(
+        jaxsim.engine_tick_packed, diss_majority=diss_majority,
+        seq_majority=seq_majority, order_budget=order_budget))
+    q, out = vtick(rs.q, packed_acks, packed_votes)
+    entries, counts = merge_mod.entries_from_assigned(
+        out["assigned"], rs.slot_ids, max_entries)
+    merge_state = merge_mod.append_entries(merge_state, entries, counts)
+    rs = RecycleState(q=q, slot_ids=rs.slot_ids, retired=rs.retired)
+    rs, n_ret = recycle_groups(rs, watermark=watermark, id_stride=id_stride)
+    out = dict(out, n_retired=n_ret)
+    return rs, merge_state, out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "order_budget", "max_entries",
+    "watermark", "id_stride"))
+def recycled_tick_merged(rs: RecycleState, merge_state,
+                         packed_acks: jax.Array, packed_votes: jax.Array,
+                         *, diss_majority: int, seq_majority: int,
+                         order_budget: int, max_entries: int | None = None,
+                         watermark: int, id_stride: int)\
+        -> tuple[RecycleState, "merge_mod.MergeState", dict]:
+    """Single-step entry point of the sustained engine (the scan body of
+    ``run_recycled_ticks_merged``), for host-driven loops that must read
+    ``rs.slot_ids`` back between ticks — e.g. traffic generators that
+    address ids, not slots."""
+    max_entries = _resolve_max_entries(max_entries, order_budget)
+    return _recycled_body(rs, merge_state, packed_acks, packed_votes,
+                          diss_majority=diss_majority,
+                          seq_majority=seq_majority,
+                          order_budget=order_budget, max_entries=max_entries,
+                          watermark=watermark, id_stride=id_stride)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "order_budget", "max_entries",
+    "watermark", "id_stride"))
+def run_recycled_ticks_merged(rs: RecycleState, merge_state,
+                              packed_acks_seq: jax.Array,
+                              packed_votes_seq: jax.Array, *,
+                              diss_majority: int, seq_majority: int,
+                              order_budget: int,
+                              max_entries: int | None = None,
+                              watermark: int, id_stride: int)\
+        -> tuple[RecycleState, "merge_mod.MergeState", jax.Array,
+                 jax.Array, jax.Array]:
+    """Fused sustained hot loop: scan T recycled steps, then gate.
+
+    Same shapes and return contract as ``run_sharded_ticks_merged``, but
+    the engine state is a :class:`RecycleState` and slots are recycled
+    between ticks, so the loop can run for arbitrarily many window
+    generations — call it repeatedly with the carried (rs, merge_state)
+    to measure sustained throughput segment by segment. Returns
+    (rs, merge_state, merged, merged_count, committed_count).
+
+    Traffic addressing caveat: tiles index slots by *position*, and
+    recycling remaps position→id mid-scan where the caller cannot observe
+    ``rs.slot_ids``. Only position-uniform traffic (e.g. saturated
+    backlog tiles, every live slot treated alike) is sound here; a
+    traffic source that addresses specific *ids* must drive
+    ``recycled_tick_merged`` one step at a time and rebuild its tiles
+    from the live ``rs.slot_ids`` between ticks.
+
+    Capacity bound: recycling unbounds the *window*, not the merge log —
+    ``merge_state`` must be sized for the whole run (per-group capacity ≥
+    total appended entries, ≤ ticks × max_entries). ``append_entries``
+    silently drops writes past capacity while watermarks keep advancing,
+    so an undersized log plateaus the merged/committed counts; long-lived
+    services should checkpoint and re-init the log between segments (log
+    compaction is the merge-side sibling of window recycling).
+    """
+    max_entries = _resolve_max_entries(max_entries, order_budget)
+    body_kw = dict(diss_majority=diss_majority, seq_majority=seq_majority,
+                   order_budget=order_budget, max_entries=max_entries,
+                   watermark=watermark, id_stride=id_stride)
+
+    def body(carry, tv):
+        rs, ms = carry
+        a, v = tv
+        rs, ms, _ = _recycled_body(rs, ms, a, v, **body_kw)
+        return (rs, ms), ()
+
+    (rs, merge_state), _ = jax.lax.scan(
+        body, (rs, merge_state), (packed_acks_seq, packed_votes_seq))
+    merged, count, committed = recycled_committed_prefix(rs, merge_state)
+    return rs, merge_state, merged, count, committed

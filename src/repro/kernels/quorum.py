@@ -13,6 +13,15 @@ One kernel launch processes a [BLOCK_W, WORDS] tile per grid step; rows
 are 8-aligned, the word lane dim is padded to 128 lanes by the caller-
 chosen WORDS (we keep WORDS as-is — it is ≤ 32 for 1000 disseminators,
 well under a VREG row; Mosaic handles sub-128 lanes with masking).
+
+The kernel is completely oblivious to the engine's window recycling
+(``repro.engine.sharded.RecycleState``): compaction/refill is host-side
+slot remapping *around* the kernel's grid — the kernel always sees a
+dense ``[W, WORDS]`` (or grouped ``[G, W, WORDS]``) tile and neither
+knows nor cares which global id a row currently holds. When the
+requested ``block_w`` does not divide W (e.g. odd, non-8-aligned window
+sizes), the largest divisor of W not exceeding it is used instead, so any
+window shape launches without caller-side padding.
 """
 from __future__ import annotations
 
@@ -24,6 +33,23 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_BLOCK_W = 256
+
+
+def _pick_block_w(W: int, block_w: int) -> int:
+    """Pick a window block size that divides W.
+
+    Preference order: the largest 8-aligned divisor ≤ min(block_w, W)
+    (TPU sublane alignment), else the largest divisor > 1, else W itself
+    in a single launch — never 1-row blocks, which would silently turn an
+    awkward W (e.g. prime) into a W-step grid."""
+    b = min(block_w, W)
+    for cand in range(b - b % 8, 0, -8):
+        if W % cand == 0:
+            return cand
+    for cand in range(b, 1, -1):
+        if W % cand == 0:
+            return cand
+    return W
 
 
 def _quorum_kernel(bits_ref, update_ref, stable_in_ref,
@@ -52,8 +78,7 @@ def quorum_update(bits: jax.Array, update: jax.Array, stable: jax.Array,
     interpret=True executes the kernel body in Python on CPU (how this
     container validates it); on a TPU runtime pass interpret=False."""
     W, WORDS = bits.shape
-    block_w = min(block_w, W)
-    assert W % block_w == 0, (W, block_w)
+    block_w = _pick_block_w(W, block_w)
     grid = (W // block_w,)
     kernel = functools.partial(_quorum_kernel, majority=majority)
     return pl.pallas_call(
@@ -93,8 +118,7 @@ def quorum_update_grouped(bits: jax.Array, update: jax.Array,
     window blocks stay contiguous in VMEM; the kernel body is shared with
     the single-group launch (word lanes are the last axis either way)."""
     G, W, WORDS = bits.shape
-    block_w = min(block_w, W)
-    assert W % block_w == 0, (W, block_w)
+    block_w = _pick_block_w(W, block_w)
     grid = (G, W // block_w)
     kernel = functools.partial(_quorum_kernel, majority=majority)
     return pl.pallas_call(

@@ -1,0 +1,117 @@
+"""Engine ↔ DES cross-validation (ROADMAP open item): extract per-group
+ordering traffic from a full HTPaxosSim run, replay it through the jax
+engine (repro.engine) at instance granularity, and assert the engine's
+merged consumable prefix is *identical end-to-end* to every DES learner's
+executed bid order.
+
+Granularity bridge: the DES ordering layer is run with
+``order_batch_max=1`` so each Paxos instance decides exactly one batch_id
+(or an explicit no-op skip) — the engine's one-entry-per-instance world.
+The replay acks the slot holding group g's instance-t bid at tick t with
+a saturated quorum, so the engine assigns instances in exactly the DES's
+per-group decided order; noop instances become merge SKIP padding (or,
+when a round is all-noop, vanish entirely — legal for both sides since a
+full skip round contributes nothing to either merged order)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.htpaxos import HTConfig, HTPaxosSim
+from repro.engine import merge as M
+from repro.engine import router
+from repro.engine import sharded as S
+
+NOOP = "__noop__"
+
+
+def run_des(G, seed=0):
+    cfg = HTConfig(n_diss=5, n_seq=3, n_learners=1, n_clients=6,
+                   batch_size=2, seed=seed, n_groups=G)
+    cfg.ordering.order_batch_max = 1     # one bid per instance (see module doc)
+    sim = HTPaxosSim(cfg, requests_per_client=4, client_gap=10.0)
+    sim.run(until=6_000)
+    return sim
+
+
+def group_instance_streams(sim):
+    """Per-group decided value streams in instance order, one bid (or
+    NOOP) per instance, asserted gap-free."""
+    streams = []
+    for grp in sim.seq_groups:
+        log: dict = {}
+        for s in grp:
+            log.update(sim.agents[s].stable["decided_log"])
+        assert set(log) == set(range(len(log))), "gap in decided log"
+        vals = [log[i] for i in range(len(log))]
+        assert all(len(v) == 1 for v in vals)    # order_batch_max=1 held
+        streams.append([v[0] for v in vals])
+    return streams
+
+
+def replay_through_engine(streams, G):
+    """Drive repro.engine with saturated per-instance ack tiles derived
+    from the DES streams; return the consumable merged bid order."""
+    T = max((len(s) for s in streams), default=0)
+    real = [[b for b in s if b != NOOP] for s in streams]
+    W = max(max((len(r) for r in real), default=1), 1)
+    # slot k of group g holds group g's k-th real bid; global int ids are
+    # indices into a flat bid table
+    bid_table = [b for r in real for b in r]
+    bid_to_int = {b: i for i, b in enumerate(bid_table)}
+    slot_ids = np.full((G, W), len(bid_table), np.int32)   # sentinel: unused
+    for g, r in enumerate(real):
+        for k, b in enumerate(r):
+            slot_ids[g, k] = bid_to_int[b]
+    # ack the slot of instance t's bid at tick t (full word ≥ any majority)
+    acks = np.zeros((T, G, W, 1), np.uint32)
+    for g, s in enumerate(streams):
+        k = 0
+        for t, b in enumerate(s):
+            if b != NOOP:
+                acks[t, g, k, 0] = 0xFFFFFFFF
+                k += 1
+    votes = np.full((T, G, W, 1), 0xFFFFFFFF, np.uint32)   # commit instantly
+    st = S.init_sharded(G, W, 5, 3)
+    ms = M.init_merge(G, max(T, 1))
+    st, ms, merged, cnt, committed = S.run_sharded_ticks_merged(
+        st, ms, jnp.asarray(acks), jnp.asarray(votes),
+        jnp.asarray(slot_ids), diss_majority=3, seq_majority=2,
+        order_budget=1)
+    assert int(committed) == int(cnt) == len(bid_table)
+    return [bid_table[i] for i in np.asarray(merged)[:int(committed)]]
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_engine_merge_matches_des_learners_end_to_end(G):
+    sim = run_des(G)
+    n = 6 * 4
+    assert sim.total_replied() == n
+    streams = group_instance_streams(sim)
+    # the DES router and the engine-side ownership agree bid by bid
+    for g, s in enumerate(streams):
+        for b in s:
+            if b != NOOP:
+                assert router.route_id(b, G) == g
+    engine_order = replay_through_engine(streams, G)
+    # every learner (disseminator-co-located and standalone) executed the
+    # exact same merged bid order the engine derives
+    learners = sim.all_learner_agents()
+    assert learners
+    for a in learners:
+        assert a.executed_bid_order == engine_order, a.node_id
+    # and it is the complete set of issued batches
+    assert len(engine_order) == len(set(engine_order))
+    assert sorted(engine_order) == sorted(
+        b for s in streams for b in s if b != NOOP)
+
+
+def test_engine_merge_matches_des_across_seeds():
+    """Same end-to-end identity under a different interleaving of client
+    traffic (different seed → different batching/routing/skip pattern)."""
+    sim = run_des(2, seed=3)
+    streams = group_instance_streams(sim)
+    engine_order = replay_through_engine(streams, 2)
+    for a in sim.all_learner_agents():
+        assert a.executed_bid_order == engine_order, a.node_id

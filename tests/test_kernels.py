@@ -13,7 +13,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import jaxsim
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.quorum import quorum_update
+from repro.kernels.quorum import quorum_update, quorum_update_grouped
 from repro.kernels.rwkv6_scan import wkv6_chunked
 
 
@@ -55,6 +55,60 @@ def test_quorum_threshold_property(seed, d):
     want = jaxsim.oracle_quorum(acks, maj)
     assert np.array_equal(np.asarray(stable), want)
     assert np.array_equal(np.asarray(counts), acks.sum(1))
+
+
+@pytest.mark.parametrize("G,W,D", [
+    (2, 12, 32),     # non-8-aligned window, exact 1-word boundary
+    (3, 20, 33),     # non-8-aligned window, word + 1 bit
+    (1, 7, 31),      # window smaller than a sublane tile, word − 1 bit
+    (2, 36, 65),     # non-8-aligned window, 2 words + 1 bit
+    (4, 10, 1),      # degenerate single-disseminator bitset
+    (2, 24, 64),     # exact 2-word boundary
+])
+def test_quorum_kernel_grouped_edge_shapes_vs_packed_core(G, W, D):
+    """Parity at awkward shapes: non-8-aligned window sizes and WORDS
+    boundaries, grouped kernel (interpret mode, block_w auto-clamped to a
+    divisor of W) vs the jaxsim packed-core reference — the exact math the
+    sharded engine vmaps, and the tiles window recycling remaps around
+    (the kernel itself stays oblivious to recycling)."""
+    words = (D + 31) // 32
+    rng = np.random.default_rng(G * 1000 + W * 10 + D)
+    bits = jnp.asarray(rng.integers(0, 2**32, (G, W, words), dtype=np.uint32))
+    upd = jnp.asarray(rng.integers(0, 2**32, (G, W, words), dtype=np.uint32))
+    stable = jnp.asarray(rng.random((G, W)) < 0.3)
+    maj = D // 2 + 1
+    new_bits, counts, new_stable = quorum_update_grouped(
+        bits, upd, stable, majority=maj, interpret=True)
+    # reference: the un-jitted packed core of the single-group engine,
+    # vmapped along G exactly as repro.engine.sharded does
+    st = jaxsim.QuorumState(
+        ack_bits=bits, vote_bits=jnp.zeros((G, W, 1), jnp.uint32),
+        stable=stable, instance=jnp.full((G, W), -1, jnp.int32),
+        decided=jnp.zeros((G, W), jnp.bool_),
+        next_instance=jnp.zeros((G,), jnp.int32))
+    want = jax.vmap(
+        lambda s, u: jaxsim.absorb_acks_packed(s, u, maj))(st, upd)
+    assert np.array_equal(np.asarray(new_bits), np.asarray(want.ack_bits))
+    assert np.array_equal(np.asarray(new_stable), np.asarray(want.stable))
+    assert np.array_equal(np.asarray(counts),
+                          np.asarray(jax.vmap(jaxsim.popcount_rows)(
+                              want.ack_bits)))
+
+
+def test_quorum_kernel_single_group_odd_window():
+    """1-D launch at a non-dividing block size: block_w falls back to the
+    largest divisor of W instead of asserting."""
+    W, D = 40, 100
+    words = (D + 31) // 32
+    rng = np.random.default_rng(40)
+    bits = jnp.asarray(rng.integers(0, 2**32, (W, words), dtype=np.uint32))
+    upd = jnp.asarray(rng.integers(0, 2**32, (W, words), dtype=np.uint32))
+    stable = jnp.zeros((W,), jnp.bool_)
+    got = quorum_update(bits, upd, stable, majority=D // 2 + 1,
+                        block_w=16, interpret=True)   # 16 ∤ 40 → block 8
+    want = ref.quorum_ref(bits, upd, stable, majority=D // 2 + 1)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,90 @@
+"""Property tests for the hash router (repro.engine.router), via the
+hypothesis/fallback shim: every batch_id is routed to exactly one group,
+routing is a pure function of (id, G) — stable under batch permutation
+and independent of any engine/window state — and the vectorized jax path
+agrees with itself elementwise regardless of surrounding batch content."""
+from __future__ import annotations
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.engine import router
+
+
+def bids_from(seeds, tags=("d0", "d1", "c9")):
+    """Deterministic python-level batch_ids (tuples, the DES shape)."""
+    return [(tags[s % len(tags)], s) for s in seeds]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds=st.lists(st.integers(0, 10_000), min_size=0, max_size=40),
+       groups=st.integers(1, 9))
+def test_every_bid_routed_to_exactly_one_group(seeds, groups):
+    bids = bids_from(seeds)
+    parts = router.partition_ids(bids, groups)
+    assert len(parts) == groups
+    # partition: multiset-complete, no bid in two groups
+    assert sorted(sum(parts, [])) == sorted(bids)
+    for g, part in enumerate(parts):
+        for b in part:
+            assert router.route_id(b, groups) == g
+            assert 0 <= router.route_id(b, groups) < groups
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds=st.lists(st.integers(0, 10_000), min_size=2, max_size=30),
+       groups=st.integers(2, 8), pivot=st.integers(0, 29))
+def test_routing_stable_under_batch_permutation(seeds, groups, pivot):
+    """A bid's group never depends on which batch it arrives in or where:
+    rotating the batch permutes each group's list identically but moves no
+    bid between groups."""
+    bids = bids_from(seeds)
+    k = pivot % len(bids)
+    rotated = bids[k:] + bids[:k]
+    by_bid = {b: g for g, part in
+              enumerate(router.partition_ids(bids, groups)) for b in part}
+    by_bid_rot = {b: g for g, part in
+                  enumerate(router.partition_ids(rotated, groups))
+                  for b in part}
+    assert by_bid == by_bid_rot
+    # relative order within each group follows the input order
+    for g, part in enumerate(router.partition_ids(rotated, groups)):
+        assert part == [b for b in rotated if by_bid[b] == g]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), groups=st.sampled_from([2, 4, 8]),
+       n=st.integers(1, 64))
+def test_vectorized_routing_independent_of_window_state(seed, groups, n):
+    """route_ids is elementwise: an id's group is identical whether it is
+    routed alone, inside a random batch, or after any amount of unrelated
+    routing — there is no hidden window/router state."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 2**32, n, dtype=np.uint32)
+    batch = np.asarray(router.route_ids(jnp.asarray(ids), groups))
+    assert batch.min() >= 0 and batch.max() < groups
+    # routed alone, one by one
+    solo = np.asarray([int(router.route_ids(jnp.asarray([i]), groups)[0])
+                       for i in ids[: min(n, 8)]])
+    assert np.array_equal(solo, batch[: min(n, 8)])
+    # interleaving other traffic changes nothing (pure function)
+    noise = rng.integers(0, 2**32, 128, dtype=np.uint32)
+    router.route_ids(jnp.asarray(noise), groups)
+    again = np.asarray(router.route_ids(jnp.asarray(ids), groups))
+    assert np.array_equal(batch, again)
+    # shuffled batch = shuffled groups
+    perm = rng.permutation(n)
+    shuffled = np.asarray(router.route_ids(jnp.asarray(ids[perm]), groups))
+    assert np.array_equal(shuffled, batch[perm])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seeds=st.lists(st.integers(0, 5000), min_size=1, max_size=20))
+def test_python_route_deterministic_across_calls(seeds):
+    bids = bids_from(seeds)
+    for groups in (1, 3, 5):
+        first = [router.route_id(b, groups) for b in bids]
+        assert first == [router.route_id(b, groups) for b in bids]
+        if groups == 1:
+            assert set(first) == {0}

@@ -1,0 +1,278 @@
+"""Window recycling (repro.engine.sharded RecycleState + jaxsim
+compact_and_refill_packed): the compaction core retires exactly the
+contiguous decided instance prefix and preserves FIFO slot order; a
+recycled engine is bit-identical — merge order and commit gate — to a
+fresh oversized window fed the same id-keyed traffic; and sustained
+throughput holds across ≥4 window generations (the count-based mirror of
+the BENCH_window_recycling acceptance criterion)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import jaxsim
+from repro.engine import merge as M
+from repro.engine import sharded as S
+
+
+def saturated(G, W, words, T=None):
+    shape = (G, W, words) if T is None else (T, G, W, words)
+    return jnp.full(shape, 0xFFFFFFFF, jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# compact_and_refill_packed unit behavior
+# ---------------------------------------------------------------------------
+
+def test_compact_retires_decided_prefix_only():
+    """Slots decided out of instance order must survive compaction: only
+    the contiguous decided prefix (in instance space) is retired."""
+    W = 8
+    st = jaxsim.init_state(W, 5, 3)
+    # instances 0..4 assigned to slots 0..4; decided = {0, 1, 3} — the
+    # frontier stops at instance 2, so only slots 0 and 1 retire
+    st = st._replace(
+        instance=jnp.asarray([0, 1, 2, 3, 4, -1, -1, -1], jnp.int32),
+        decided=jnp.asarray([True, True, False, True, False] + [False] * 3),
+        stable=jnp.asarray([True] * 5 + [False] * 3),
+        ack_bits=jnp.arange(8, dtype=jnp.uint32)[:, None] + 1,
+        next_instance=jnp.asarray(5, jnp.int32))
+    slot_ids = jnp.arange(W, dtype=jnp.int32)
+    st2, ids2, retired2, n_ret = jaxsim.compact_and_refill_packed(
+        st, slot_ids, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+    assert int(n_ret) == 2 and int(retired2) == 2
+    # live slots shifted down in slot order; instances preserved
+    assert np.asarray(st2.instance).tolist() == [2, 3, 4, -1, -1, -1, -1, -1]
+    assert np.asarray(st2.decided).tolist() == \
+        [False, True, False] + [False] * 5
+    assert np.asarray(st2.stable).tolist() == [True] * 3 + [False] * 5
+    # ack bitsets moved with their slots; freed tail zeroed
+    assert np.asarray(st2.ack_bits)[:, 0].tolist() == [3, 4, 5, 6, 7, 8, 0, 0]
+    # kept ids shift down, fresh tail ids continue the monotone sequence
+    assert np.asarray(ids2).tolist() == [2, 3, 4, 5, 6, 7, 8, 9]
+    assert int(st2.next_instance) == 5
+
+
+def test_compact_noop_when_disabled_or_nothing_decided():
+    rng = np.random.default_rng(0)
+    W = 16
+    st = jaxsim.init_state(W, 33, 5)
+    st = st._replace(
+        ack_bits=jnp.asarray(rng.integers(0, 2**32, (W, 2), dtype=np.uint32)))
+    slot_ids = jnp.arange(W, dtype=jnp.int32)
+    retired = jnp.asarray(0, jnp.int32)
+    base = jnp.asarray(0, jnp.int32)
+    # nothing decided → bit-exact no-op
+    st2, ids2, r2, n2 = jaxsim.compact_and_refill_packed(
+        st, slot_ids, retired, base)
+    assert int(n2) == 0 and int(r2) == 0
+    for a, b in zip(st, st2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(slot_ids), np.asarray(ids2))
+    # decided but gated off (enable=False) → bit-exact no-op too
+    st = st._replace(instance=jnp.arange(W, dtype=jnp.int32),
+                     decided=jnp.ones((W,), jnp.bool_),
+                     next_instance=jnp.asarray(W, jnp.int32))
+    st3, ids3, r3, n3 = jaxsim.compact_and_refill_packed(
+        st, slot_ids, retired, base, jnp.asarray(False))
+    assert int(n3) == 0 and int(r3) == 0
+    for a, b in zip(st, st3):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(slot_ids), np.asarray(ids3))
+
+
+def test_init_recycled_requires_stride_for_multiple_groups():
+    """With G > 1 a defaulted id_stride=window would collide with the next
+    group's id range at the first recycle — must be refused loudly."""
+    with pytest.raises(ValueError, match="id_stride"):
+        S.init_recycled(2, 8, 5, 3)
+    # single group: no next group to collide with, default allowed
+    rs = S.init_recycled(1, 8, 5, 3)
+    assert np.asarray(rs.slot_ids).tolist() == [list(range(8))]
+
+
+def test_recycle_groups_watermark_gates_per_group():
+    """Only the group whose free-slot count is below the watermark
+    recycles; the other is untouched."""
+    G, W = 2, 8
+    rs = S.init_recycled(G, W, 5, 3, id_stride=100)
+    votes = np.zeros((G, W, 1), np.uint32)
+    votes[0, :6, :] = 0x7                      # group 0: 6 of 8 decided
+    q, out = S.sharded_tick(rs.q, saturated(G, W, 1), jnp.asarray(votes),
+                            diss_majority=3, seq_majority=2)
+    rs = S.RecycleState(q=q, slot_ids=rs.slot_ids, retired=rs.retired)
+    # group 0 free = 2 < 4; group 1 free = 8 (votes never arrived)
+    rs2, n_ret = S.recycle_groups(rs, watermark=4, id_stride=100)
+    assert np.asarray(n_ret).tolist() == [6, 0]
+    assert np.asarray(rs2.retired).tolist() == [6, 0]
+    assert np.asarray(rs2.slot_ids)[0].tolist() == [6, 7, 8, 9, 10, 11, 12, 13]
+    assert np.asarray(rs2.slot_ids)[1].tolist() == \
+        np.asarray(rs.slot_ids)[1].tolist()
+    for a, b in zip(rs.q, rs2.q):
+        assert np.array_equal(np.asarray(a)[1], np.asarray(b)[1])
+
+
+# ---------------------------------------------------------------------------
+# bit-identity with a fresh oversized window (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G", [1, 4])
+def test_saturated_recycling_equals_oversized_window(G):
+    """Sustained saturated traffic through a small recycled window must
+    produce the same merged order and commit gate as a fresh window big
+    enough to hold the whole run — recycling is pure slot remapping."""
+    W, B, T = 16, 4, 20
+    D, SEQ = 5, 3
+    STRIDE = 4096
+    W_BIG = B * T                              # oversized: holds every id
+    ms_r = M.init_merge(G, T * B)
+    rs = S.init_recycled(G, W, D, SEQ, id_stride=STRIDE)
+    rs, ms_r, merged_r, cnt_r, com_r = S.run_recycled_ticks_merged(
+        rs, ms_r, saturated(G, W, 1, T), saturated(G, W, 1, T),
+        diss_majority=3, seq_majority=2, order_budget=B,
+        watermark=W, id_stride=STRIDE)
+
+    big_ids = (jnp.arange(G, dtype=jnp.int32)[:, None] * STRIDE
+               + jnp.arange(W_BIG, dtype=jnp.int32)[None, :])
+    st = S.init_sharded(G, W_BIG, D, SEQ)
+    ms_b = M.init_merge(G, T * B)
+    st, ms_b, merged_b, cnt_b, com_b = S.run_sharded_ticks_merged(
+        st, ms_b, saturated(G, W_BIG, 1, T), saturated(G, W_BIG, 1, T),
+        big_ids, diss_majority=3, seq_majority=2, order_budget=B)
+
+    assert int(cnt_r) == int(cnt_b) == G * B * T
+    assert int(com_r) == int(com_b) == G * B * T
+    assert np.array_equal(np.asarray(merged_r), np.asarray(merged_b))
+    # the recycled window really did cycle: ids far beyond W were ordered
+    assert int(np.asarray(rs.retired).min()) > W
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_delayed_votes_recycling_equals_oversized_window(seed):
+    """Id-keyed traffic with randomized per-id vote delays: votes for id f
+    of group g arrive from tick f//B + delay on, stalling the decided
+    frontier and forcing out-of-order decisions. The recycled engine
+    (driven host-side, rebuilding tiles from its live slot→id map every
+    tick) must still match the oversized window bit for bit."""
+    G, W, B, T = 2, 32, 4, 24
+    D, SEQ, STRIDE = 5, 3, 4096
+    W_BIG = B * T
+    rng = np.random.default_rng(seed)
+    delay = rng.integers(0, 4, (G, W_BIG))
+    vote_from = (np.arange(W_BIG)[None, :] // B) + delay   # [G, W_BIG]
+
+    dm, sm = 3, 2
+    # --- oversized reference: id f sits at slot f forever -----------------
+    votes_seq = np.zeros((T, G, W_BIG, 1), np.uint32)
+    for t in range(T):
+        votes_seq[t, :, :, 0] = np.where(t >= vote_from, 0x7, 0)
+    big_ids = (jnp.arange(G, dtype=jnp.int32)[:, None] * STRIDE
+               + jnp.arange(W_BIG, dtype=jnp.int32)[None, :])
+    st = S.init_sharded(G, W_BIG, D, SEQ)
+    ms_b = M.init_merge(G, T * B)
+    st, ms_b, merged_b, cnt_b, com_b = S.run_sharded_ticks_merged(
+        st, ms_b, saturated(G, W_BIG, 1, T), jnp.asarray(votes_seq),
+        big_ids, diss_majority=dm, seq_majority=sm, order_budget=B)
+
+    # --- recycled engine, host-driven: tiles built from live slot_ids ----
+    rs = S.init_recycled(G, W, D, SEQ, id_stride=STRIDE)
+    ms_r = M.init_merge(G, T * B)
+    for t in range(T):
+        local = np.asarray(rs.slot_ids) - \
+            np.arange(G, dtype=np.int32)[:, None] * STRIDE   # [G, W]
+        # ids admitted past the schedule (local ≥ W_BIG) never vote — they
+        # don't exist in the oversized reference either
+        sched = vote_from[np.arange(G)[:, None], np.clip(local, 0, W_BIG - 1)]
+        sched = np.where(local < W_BIG, sched, T + 1)
+        vt = np.where(t >= sched, np.uint32(0x7), np.uint32(0))[..., None]
+        rs, ms_r, _ = S.recycled_tick_merged(
+            rs, ms_r, saturated(G, W, 1), jnp.asarray(vt),
+            diss_majority=dm, seq_majority=sm, order_budget=B,
+            watermark=W, id_stride=STRIDE)
+    merged_r, cnt_r, com_r = S.recycled_committed_prefix(rs, ms_r)
+
+    assert int(cnt_r) == int(cnt_b)
+    assert int(com_r) == int(com_b)
+    assert np.array_equal(np.asarray(merged_r), np.asarray(merged_b))
+    assert int(np.asarray(rs.retired).min()) > W   # really recycled
+
+
+# ---------------------------------------------------------------------------
+# sustained throughput across generations (count-based bench mirror)
+# ---------------------------------------------------------------------------
+
+def test_sustained_ordering_rate_across_generations():
+    """≥4 window generations: every generation orders ≥90% of the first
+    generation's ids (deterministic count version of the bench criterion),
+    while a non-recycled engine collapses to zero after its window."""
+    G, W, B, GENS = 4, 64, 8, 5
+    T_gen = W // B                              # ticks per window generation
+    STRIDE = 1 << 20
+    rs = S.init_recycled(G, W, 5, 3, id_stride=STRIDE)
+    ms = M.init_merge(G, GENS * T_gen * B)
+    committed = [0]
+    for _ in range(GENS):
+        rs, ms, _, _, com = S.run_recycled_ticks_merged(
+            rs, ms, saturated(G, W, 1, T_gen), saturated(G, W, 1, T_gen),
+            diss_majority=3, seq_majority=2, order_budget=B,
+            watermark=W // 2, id_stride=STRIDE)
+        committed.append(int(com))
+    per_gen = np.diff(committed)
+    assert per_gen[0] > 0
+    assert all(g >= 0.9 * per_gen[0] for g in per_gen[1:]), per_gen
+    # contrast: the single-use window stops dead after one generation
+    st = S.init_sharded(G, W, 5, 3)
+    ms2 = M.init_merge(G, GENS * T_gen * B)
+    dead = []
+    for _ in range(GENS):
+        st, ms2, _, _, com2 = S.run_sharded_ticks_merged(
+            st, ms2, saturated(G, W, 1, T_gen), saturated(G, W, 1, T_gen),
+            S.default_slot_ids(G, W), diss_majority=3, seq_majority=2,
+            order_budget=B)
+        dead.append(int(com2))
+    assert dead[-1] == dead[0] == G * W          # cold burst, then nothing
+
+
+# ---------------------------------------------------------------------------
+# invariants under random traffic
+# ---------------------------------------------------------------------------
+
+def test_recycle_invariants_random_traffic():
+    """Random sparse traffic with watermark recycling: live instances
+    always span [retired, next_instance) with no duplicates, slot ids stay
+    unique and monotone-bounded, and the consumable prefix only grows."""
+    rng = np.random.default_rng(7)
+    G, W, D, SEQ, T = 3, 24, 33, 5, 40
+    STRIDE = 10_000
+    dm, sm = D // 2 + 1, SEQ // 2 + 1
+    rs = S.init_recycled(G, W, D, SEQ, id_stride=STRIDE)
+    ms = M.init_merge(G, 1024)
+    last_com = 0
+    for t in range(T):
+        acks = rng.integers(0, 2**32, (G, W, 2), dtype=np.uint32) \
+            & rng.integers(0, 2**32, (G, W, 2), dtype=np.uint32)
+        votes = (rng.random((G, W, 1)) < 0.4) * np.uint32(0x1F)
+        rs, ms, out = S.recycled_tick_merged(
+            rs, ms, jnp.asarray(acks), jnp.asarray(votes),
+            diss_majority=dm, seq_majority=sm, order_budget=4,
+            watermark=W // 2, id_stride=STRIDE)
+        inst = np.asarray(rs.q.instance)
+        retired = np.asarray(rs.retired)
+        nxt = np.asarray(rs.q.next_instance)
+        ids = np.asarray(rs.slot_ids)
+        for g in range(G):
+            live = inst[g][inst[g] >= 0]
+            assert len(set(live.tolist())) == len(live)
+            if len(live):
+                assert live.min() >= retired[g] and live.max() < nxt[g]
+            assert nxt[g] - retired[g] <= W       # live span fits the window
+            assert len(set(ids[g].tolist())) == W
+            lo, hi = g * STRIDE, g * STRIDE + W + retired[g]
+            assert ids[g].min() >= lo and ids[g].max() < hi
+        _, cnt, com = S.recycled_committed_prefix(rs, ms)
+        assert int(com) <= int(cnt)
+        assert int(com) >= last_com               # monotone consumption
+        last_com = int(com)
+    assert np.asarray(rs.retired).sum() > 0       # recycling actually ran
