@@ -18,10 +18,18 @@ figure-level quantity the paper plots).
   sustained_engine  window-recycled engine across ≥4 window generations
           (G ∈ {1,4}): per-generation ids/s plus the non-recycled cold
           burst for contrast — written to BENCH_window_recycling.json
+  dissem  sharded dissemination & stability engine (repro.dissem):
+          per-node replication bandwidth, partitioned (G partitions of
+          m/G) vs global disseminator sets at equal total batch load —
+          written to BENCH_sharded_dissemination.json
   kernels interpret-mode kernel sanity timings
+
+Run everything (``python benchmarks/run.py``) or one bench by its short
+name (``--only dissem``).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
@@ -41,6 +49,15 @@ def _t(fn, n=3):
 
 def emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+
+
+def _write_bench_json(filename: str, rows) -> None:
+    """Write one bench's machine-readable rows next to this script and
+    emit the artifact name on the CSV stream (CI uploads BENCH_*.json)."""
+    out = Path(__file__).resolve().parent / filename
+    out.write_text(json.dumps(rows, indent=2) + "\n")
+    emit(f"{filename.removeprefix('BENCH_').removesuffix('.json')}/json",
+         0.1, out.name)
 
 
 # -- closed-form figures -------------------------------------------------------
@@ -235,8 +252,7 @@ def bench_sharded_engine() -> None:
     deterministic round-robin merge that produces the single learner log.
     """
     import jax
-    from repro.engine import merge as M
-    from repro.engine import sharded as S
+    import repro.engine as E
 
     W_TOTAL, D, SEQ, BUDGET, SLACK = 8192, 1000, 16, 64, 4
     words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
@@ -249,12 +265,12 @@ def bench_sharded_engine() -> None:
         # ordering budget is the only throughput limiter (as in §5.1)
         packs = np.full((T, G, Wg, words_d), 0xFFFFFFFF, np.uint32)
         pvotes = np.full((T, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
-        slot_ids = S.default_slot_ids(G, Wg)
-        st0 = S.init_sharded(G, Wg, D, SEQ)
-        ms0 = M.init_merge(G, T * BUDGET)
+        slot_ids = E.default_slot_ids(G, Wg)
+        st0 = E.init_sharded(G, Wg, D, SEQ)
+        ms0 = E.init_merge(G, T * BUDGET)
 
         def run():
-            st, ms, merged, cnt, committed = S.run_sharded_ticks_merged(
+            st, ms, merged, cnt, committed = E.run_sharded_ticks_merged(
                 st0, ms0, packs, pvotes, slot_ids,
                 diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
                 order_budget=BUDGET)
@@ -273,9 +289,7 @@ def bench_sharded_engine() -> None:
                      "window_per_group": Wg, "ticks": T,
                      "order_budget": BUDGET, "ids_ordered": ordered,
                      "speedup_vs_G1": ids_per_sec / base})
-    out = Path(__file__).resolve().parent / "BENCH_sharded_engine.json"
-    out.write_text(json.dumps(rows, indent=2) + "\n")
-    emit("sharded_engine/json", 0.1, out.name)
+    _write_bench_json("BENCH_sharded_engine.json", rows)
 
 
 def bench_sustained_engine() -> None:
@@ -290,8 +304,7 @@ def bench_sustained_engine() -> None:
     rate over ≥4 generations stays ≥90% of the first generation's (G=4).
     """
     import jax
-    from repro.engine import merge as MG
-    from repro.engine import sharded as S
+    import repro.engine as E
 
     W_TOTAL, D, SEQ, BUDGET, GENS = 8192, 1000, 16, 64, 6
     words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
@@ -307,16 +320,16 @@ def bench_sustained_engine() -> None:
                   order_budget=BUDGET, watermark=Wg // 2, id_stride=STRIDE)
 
         def segment(rs, ms):
-            rs, ms, _, _, com = S.run_recycled_ticks_merged(
+            rs, ms, _, _, com = E.run_recycled_ticks_merged(
                 rs, ms, packs, pvotes, **kw)
             jax.block_until_ready(com)
             return rs, ms, int(com)
 
         # warm the jit on throwaway state, then run GENS timed generations
-        segment(S.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE),
-                MG.init_merge(G, cap))
-        rs = S.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
-        ms = MG.init_merge(G, cap)
+        segment(E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE),
+                E.init_merge(G, cap))
+        rs = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
+        ms = E.init_merge(G, cap)
         committed, times = [0], []
         for _ in range(GENS):
             t0 = time.perf_counter()
@@ -338,12 +351,12 @@ def bench_sustained_engine() -> None:
              "only variance)")
         # non-recycled contrast: same traffic, single-use window → dead
         # after generation 0
-        st = S.init_sharded(G, Wg, D, SEQ)
-        ms0 = MG.init_merge(G, cap)
+        st = E.init_sharded(G, Wg, D, SEQ)
+        ms0 = E.init_merge(G, cap)
         cold = [0]
         for _ in range(GENS):
-            st, ms0, _, _, c = S.run_sharded_ticks_merged(
-                st, ms0, packs, pvotes, S.default_slot_ids(G, Wg),
+            st, ms0, _, _, c = E.run_sharded_ticks_merged(
+                st, ms0, packs, pvotes, E.default_slot_ids(G, Wg),
                 diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
                 order_budget=BUDGET)
             cold.append(int(jax.block_until_ready(c)))
@@ -359,9 +372,7 @@ def bench_sustained_engine() -> None:
             "retired_per_group": np.asarray(rs.retired).tolist(),
             "single_use_committed_cumulative": cold[1:],
         })
-    out = Path(__file__).resolve().parent / "BENCH_window_recycling.json"
-    out.write_text(json.dumps(rows, indent=2) + "\n")
-    emit("sustained_engine/json", 0.1, out.name)
+    _write_bench_json("BENCH_window_recycling.json", rows)
 
 
 def bench_kernels() -> None:
@@ -389,15 +400,102 @@ def bench_kernels() -> None:
          "(interpret mode = python loop; TPU timing n/a on CPU)")
 
 
-BENCHES = [bench_fig1, bench_fig2, bench_fig3, bench_fig45, bench_fig6,
-           bench_fig7, bench_delays, bench_sim_throughput, bench_engine,
-           bench_sharded_engine, bench_sustained_engine, bench_kernels]
+def bench_dissem() -> None:
+    """Sharded dissemination engine (repro.dissem): per-node replication
+    bandwidth, partitioned vs global disseminator sets.
+
+    §5.5's second scaling axis at equal total load: B batches of k
+    requests per unit time spread over m disseminators. Global (G=1):
+    every batch replicates to all m nodes. Partitioned (G>1): the m nodes
+    split into G partitions of m/G, each batch replicates only within its
+    owning group's partition — per-node replication traffic drops ~G×
+    while the per-group stability rule (majority of the partition) keeps
+    the same fault model. Bandwidth is *measured* from the stability
+    engine's final hold bitsets (``per_node_bytes``) and cross-checked
+    against the closed forms (``replication_bytes_per_node`` per node,
+    ``analytical.bytes_ht_disseminator_partitioned`` at figure scale).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.htpaxos import batch_bytes
+    from repro.dissem import (init_dissem, partition_size, per_node_bytes,
+                              replication_bytes_per_node, stability_tick,
+                              stability_tick_fused, uniform_traffic)
+
+    M_TOTAL, B, K, Q = 20, 640, 8, 1024     # nodes, batches, reqs/batch, B/req
+    nbytes = batch_bytes(K, Q)
+    rows = []
+    base_in = None
+    for G in (1, 2, 4):
+        mp = partition_size(M_TOTAL, G)
+        Wg = B // G                          # batches per group
+        maj = mp // 2 + 1
+        packed, owner, nb = uniform_traffic(G, Wg, mp, batch_nbytes=nbytes)
+        packed_j = jnp.asarray(packed)
+        st0 = init_dissem(G, Wg, mp)
+
+        def run():
+            st, out = stability_tick(st0, packed_j, majority=maj)
+            return jax.block_until_ready(out["counts"])
+        us = _t(run, n=5)
+        st, _ = stability_tick(st0, packed_j, majority=maj)
+        in_b, out_b = per_node_bytes(st, owner, nb, mp)
+        cf = replication_bytes_per_node(K, Q, mp)
+        slots_per_node = Wg // mp
+        assert (in_b == slots_per_node * cf["in"]).all()
+        assert (out_b == slots_per_node * cf["out"]).all()
+        node_in = int(in_b.max())
+        node_out = int(out_b.max())
+        if G == 1:
+            base_in = node_in
+        emit(f"dissem/G={G}", us,
+             f"{node_in} B in/node ({mp} diss/partition, "
+             f"{base_in / node_in:.2f}x less than global)")
+        rows.append({
+            "name": f"dissem/G={G}", "us_per_call": us, "groups": G,
+            "n_diss_total": M_TOTAL, "n_diss_partition": mp,
+            "batches": B, "batches_per_group": Wg,
+            "requests_per_batch": K, "request_bytes": Q,
+            "batch_wire_bytes": int(nbytes),
+            "per_node_in_bytes": node_in, "per_node_out_bytes": node_out,
+            "closed_form_in_per_unit_time": cf["in"],
+            "closed_form_out_per_unit_time": cf["out"],
+            "in_reduction_vs_global": base_in / node_in,
+            "partitioned_below_global": node_in < base_in or G == 1,
+            "figure_scale_total_bytes": A.bytes_ht_disseminator_partitioned(
+                100_000, 1000, 20, Q, G)["total"],
+        })
+        # fused-kernel parity timing on the same tile (interpret mode)
+        if G == 2:
+            def run_fused():
+                st, out = stability_tick_fused(st0, packed_j, majority=maj,
+                                               block_w=64)
+                return jax.block_until_ready(out["newly_per_group"])
+            emit("dissem/fused_kernel_interpret", _t(run_fused, n=2),
+                 "(interpret mode = python loop; TPU timing n/a on CPU)")
+    assert all(r["partitioned_below_global"] for r in rows)
+    _write_bench_json("BENCH_sharded_dissemination.json", rows)
 
 
-def main() -> None:
+BENCHES = {
+    "fig1": bench_fig1, "fig2": bench_fig2, "fig3": bench_fig3,
+    "fig45": bench_fig45, "fig6": bench_fig6, "fig7": bench_fig7,
+    "delays": bench_delays, "sim_throughput": bench_sim_throughput,
+    "engine": bench_engine, "sharded_engine": bench_sharded_engine,
+    "sustained_engine": bench_sustained_engine, "dissem": bench_dissem,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", choices=sorted(BENCHES), default=None,
+                   help="run a single bench instead of the full suite")
+    args = p.parse_args(argv)
     print("name,us_per_call,derived")
-    for b in BENCHES:
-        b()
+    for name, b in BENCHES.items():
+        if args.only is None or name == args.only:
+            b()
 
 
 if __name__ == "__main__":

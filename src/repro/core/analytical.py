@@ -141,6 +141,32 @@ def bytes_ht_disseminator(n: float, m: int, s: int, q: int) -> dict:
     return {"in": inc, "out": out, "total": inc + out}
 
 
+def bytes_ht_disseminator_partitioned(n: float, m: int, s: int, q: int,
+                                      groups: int) -> dict:
+    """§5.5's second scaling axis: the m disseminators split into
+    ``groups`` partitions of mp = m/groups; a batch replicates only
+    within its owning partition, so every per-unit-time replication term
+    of :func:`bytes_ht_disseminator` shrinks from m to mp — batches
+    received, acks exchanged, ids per id-multicast and per decision. The
+    request-facing terms (client requests, final acks, replies) are
+    unchanged: partitioning shards *replication*, not load. With
+    ``groups=1`` this is exactly :func:`bytes_ht_disseminator`."""
+    if m % groups:
+        raise ValueError(f"m={m} not divisible by groups={groups}")
+    mp = m // groups
+    k = n / m
+    inc = (k * (OVERHEAD + ID_BYTES + q)            # client requests
+           + mp * _batch_bytes(k, q)                # partition batches
+           + mp * (OVERHEAD + ID_BYTES)             # acks for own batch
+           + (OVERHEAD + 2 * ID_BYTES + ID_BYTES * mp)  # group decision
+           + k * (OVERHEAD + ID_BYTES))             # client final acks
+    out = (_batch_bytes(k, q)                       # own batch multicast
+           + mp * (OVERHEAD + ID_BYTES)             # acks sent
+           + (OVERHEAD + ID_BYTES * mp)             # id multicast (mp ids)
+           + k * (OVERHEAD + ID_BYTES))             # replies
+    return {"in": inc, "out": out, "total": inc + out}
+
+
 def bytes_ht_leader(n: float, m: int, s: int, q: int) -> dict:
     inc = (m * (OVERHEAD + ID_BYTES * m)            # id multicasts
            + (s - 1) * (OVERHEAD + 2 * ID_BYTES))   # phase 2b

@@ -150,9 +150,57 @@ def engine_tick_packed(state: QuorumState, packed_acks: jax.Array,
     return state, {"assigned": assigned, "newly_decided": newly_decided}
 
 
+class CompactionPlan(NamedTuple):
+    """Slot permutation of one recycling pass, separated from its
+    application so *aux* per-slot state (e.g. ``repro.dissem``'s ack
+    bitsets, which must retire in lockstep with the quorum window) can be
+    compacted with the exact same keep/shift mapping as the QuorumState.
+
+    ``sidx[w]`` is the destination row of slot w (== W for retired slots —
+    scatters with ``mode="drop"`` discard them); ``n_keep`` is the live
+    slot count after compaction; ``adv`` the frontier advance (number of
+    instances retired by this pass)."""
+    sidx: jax.Array      # int32[W]
+    n_keep: jax.Array    # int32[]
+    adv: jax.Array       # int32[]
+
+
+def compaction_plan(state: QuorumState, retired: jax.Array,
+                    enable: jax.Array | None = None) -> CompactionPlan:
+    """Compute the retire/keep/shift mapping of one recycling pass (the
+    pure bookkeeping half of ``compact_and_refill_packed`` — see there for
+    the retirability rule)."""
+    W = state.decided.shape[0]
+    valid = state.instance >= 0
+    rel = jnp.where(valid, state.instance - retired, W)
+    rel = jnp.where(rel < 0, W, rel)           # OOB-guard (invariant: never)
+    # decided flags in instance order relative to the base offset
+    dec_rel = jnp.zeros((W,), jnp.bool_).at[rel].set(
+        state.decided, mode="drop")
+    # frontier advance: leading run of decided instances
+    adv = jnp.sum(jnp.cumprod(dec_rel.astype(jnp.int32)), dtype=jnp.int32)
+    if enable is not None:
+        adv = jnp.where(enable, adv, 0)
+    retire = valid & (rel < adv)
+    keep = ~retire
+    dest = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    sidx = jnp.where(keep, dest, W)            # retired rows are dropped
+    return CompactionPlan(sidx=sidx, n_keep=n_keep, adv=adv)
+
+
+def apply_compaction(plan: CompactionPlan, field: jax.Array,
+                     fill) -> jax.Array:
+    """Shift one per-slot field down per ``plan``; freed rows get
+    ``fill``. Works for any [W, ...] leading-slot-axis array."""
+    fresh = jnp.full_like(field, fill)
+    return fresh.at[plan.sidx].set(field, mode="drop")
+
+
 def compact_and_refill_packed(state: QuorumState, slot_ids: jax.Array,
                               retired: jax.Array, id_base: jax.Array,
-                              enable: jax.Array | None = None)\
+                              enable: jax.Array | None = None,
+                              plan: CompactionPlan | None = None)\
         -> tuple[QuorumState, jax.Array, jax.Array, jax.Array]:
     """Window recycling: retire the decided instance prefix, compact, refill.
 
@@ -177,45 +225,32 @@ def compact_and_refill_packed(state: QuorumState, slot_ids: jax.Array,
                 per-group id stride.
       enable:   optional bool[] gate — False makes the call a bit-exact
                 no-op (the sharded watermark check).
+      plan:     optional precomputed :class:`CompactionPlan` (must have
+                been derived from exactly (state, retired, enable) —
+                callers that also compact aux per-slot state share one
+                plan so both sides move in lockstep).
 
     Returns (state', slot_ids', retired', n_retired). ``next_instance`` is
     untouched: instances stay globally monotone per group, so live
     instances always span ``[retired', next_instance)``.
     """
     W = state.decided.shape[0]
-    valid = state.instance >= 0
-    rel = jnp.where(valid, state.instance - retired, W)
-    rel = jnp.where(rel < 0, W, rel)           # OOB-guard (invariant: never)
-    # decided flags in instance order relative to the base offset
-    dec_rel = jnp.zeros((W,), jnp.bool_).at[rel].set(
-        state.decided, mode="drop")
-    # frontier advance: leading run of decided instances
-    adv = jnp.sum(jnp.cumprod(dec_rel.astype(jnp.int32)), dtype=jnp.int32)
-    if enable is not None:
-        adv = jnp.where(enable, adv, 0)
-    retire = valid & (rel < adv)
-    keep = ~retire
-    dest = jnp.cumsum(keep.astype(jnp.int32)) - 1
-    n_keep = jnp.sum(keep.astype(jnp.int32))
-    sidx = jnp.where(keep, dest, W)            # retired rows are dropped
-
-    def _compact(field, fill):
-        fresh = jnp.full_like(field, fill)
-        return fresh.at[sidx].set(field, mode="drop")
-
+    if plan is None:
+        plan = compaction_plan(state, retired, enable)
     new_state = state._replace(
-        ack_bits=_compact(state.ack_bits, 0),
-        vote_bits=_compact(state.vote_bits, 0),
-        stable=_compact(state.stable, False),
-        instance=_compact(state.instance, -1),
-        decided=_compact(state.decided, False),
+        ack_bits=apply_compaction(plan, state.ack_bits, 0),
+        vote_bits=apply_compaction(plan, state.vote_bits, 0),
+        stable=apply_compaction(plan, state.stable, False),
+        instance=apply_compaction(plan, state.instance, -1),
+        decided=apply_compaction(plan, state.decided, False),
     )
     pos = jnp.arange(W, dtype=jnp.int32)
     # fresh tail ids continue the monotone per-group sequence; positions
     # below n_keep are fully overwritten by the kept-slot scatter
-    fresh_ids = (id_base + W + retired + (pos - n_keep)).astype(jnp.int32)
-    new_ids = fresh_ids.at[sidx].set(slot_ids, mode="drop")
-    return new_state, new_ids, retired + adv, adv
+    fresh_ids = (id_base + W + retired
+                 + (pos - plan.n_keep)).astype(jnp.int32)
+    new_ids = fresh_ids.at[plan.sidx].set(slot_ids, mode="drop")
+    return new_state, new_ids, retired + plan.adv, plan.adv
 
 
 # -- public single-group API (bool-tile interface, unchanged) -----------------

@@ -98,6 +98,11 @@ class Lan:
         self.wire_msgs = 0
         self.delivery_log: list[tuple[float, str, str, str]] = []
         self.log_deliveries = False
+        # delivery taps: callables (now, dst, msg) invoked on every
+        # successful arrival. Unlike delivery_log they see the Msg itself
+        # (payload included) — the engine↔DES cross-validation extracts
+        # dissemination traffic this way without touching agent logic.
+        self.taps: list = []
 
     def attach(self, agent: "Agent") -> None:
         self.nodes[agent.node_id] = agent
@@ -150,4 +155,6 @@ class Lan:
         st.recv_by_kind[msg.kind] += 1
         if self.log_deliveries:
             self.delivery_log.append((self.sched.now, msg.src, dst, msg.kind))
+        for tap in self.taps:
+            tap(self.sched.now, dst, msg)
         agent.on_message(msg, self)

@@ -1,0 +1,45 @@
+"""Vectorized sharded dissemination & stability engine (HT-Paxos §4.1
+steps 13–20, §5.5's partitioned-disseminator scaling axis).
+
+Layout mirrors ``repro.engine``:
+
+* ``batcher`` — request → batch accumulation under a wire-byte budget
+  (jax-free, imported eagerly: the ingest edge has no tiles yet);
+* ``engine`` — the packed-bitset stability engine: ``DissemState``
+  windows of per-id hold bitsets, majority-threshold stability ticks,
+  and the fused Pallas path (``repro.kernels.dissem``);
+* ``bandwidth`` — per-node replication/ack byte accounting that makes
+  the Figs 4–7 closed forms checkable for the partitioned variant.
+
+``engine``/``bandwidth`` pull in jax and load lazily (PEP 562), same as
+``repro.engine``, so pure-python consumers (the DES, the batcher) stay
+lightweight. The ordering-side consumer is
+``repro.engine.sharded.gated_*``: a slot's phase-2b votes only absorb
+once this engine marks its id stable.
+"""
+from .batcher import (BatchAccumulator, EMPTY_BATCH_BYTES,
+                      batch_wire_sizes, plan_batches, request_wire_bytes)
+
+_LAZY = {
+    "DissemState": "engine", "absorb_holds_packed": "engine",
+    "init_dissem": "engine", "run_stability_ticks": "engine",
+    "stability_tick": "engine", "stability_tick_dense": "engine",
+    "stability_tick_fused": "engine", "stable_ids": "engine",
+    "unpack_tile": "engine",
+    "ACK_BYTES": "bandwidth", "partition_size": "bandwidth",
+    "per_node_bytes": "bandwidth",
+    "replication_bytes_per_node": "bandwidth",
+    "uniform_traffic": "bandwidth",
+}
+
+__all__ = ["BatchAccumulator", "EMPTY_BATCH_BYTES", "batch_wire_sizes",
+           "plan_batches", "request_wire_bytes", *_LAZY]
+
+
+def __getattr__(name):
+    modname = name if name in ("engine", "bandwidth") else _LAZY.get(name)
+    if modname is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    mod = importlib.import_module(f".{modname}", __name__)
+    return mod if name == modname else getattr(mod, name)

@@ -21,6 +21,7 @@ _LAZY = {
     "entries_from_assigned": "merge", "init_merge": "merge",
     "mergeable_counts": "merge", "merged_prefix": "merge",
     "oracle_merge": "merge",
+    "default_slot_ids": "sharded",
     "init_sharded": "sharded", "run_sharded_ticks": "sharded",
     "run_sharded_ticks_merged": "sharded", "sharded_tick": "sharded",
     "sharded_tick_dense": "sharded",
@@ -28,6 +29,12 @@ _LAZY = {
     "recycle_groups": "sharded", "recycled_tick_merged": "sharded",
     "recycled_committed_prefix": "sharded",
     "run_recycled_ticks_merged": "sharded",
+    "GatedRecycleState": "sharded", "gated_tick": "sharded",
+    "gated_recycle_groups": "sharded",
+    "gated_recycled_tick_merged": "sharded",
+    "init_gated_recycled": "sharded",
+    "run_gated_ticks_merged": "sharded",
+    "run_gated_recycled_ticks_merged": "sharded",
 }
 
 __all__ = ["partition_ids", "route_id", "route_ids", *_LAZY]

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from ..core import jaxsim
 from ..core.jaxsim import QuorumState
+from ..dissem.engine import DissemState, absorb_holds_packed, init_dissem
 from . import merge as merge_mod
 
 
@@ -373,3 +374,248 @@ def run_recycled_ticks_merged(rs: RecycleState, merge_state,
         body, (rs, merge_state), (packed_acks_seq, packed_votes_seq))
     merged, count, committed = recycled_committed_prefix(rs, merge_state)
     return rs, merge_state, merged, count, committed
+
+
+# -- dissemination-stability gating -------------------------------------------
+#
+# HT-Paxos orders *ids*, but an id may only be proposed for ordering once
+# its batch is durable — a majority of the group's disseminator partition
+# holds the payload (§4.1 step 36's precondition via steps 15–20). The
+# plain engine above assumes that precondition away (every id is born
+# orderable); the gated family threads a ``repro.dissem`` DissemState
+# alongside the QuorumState and masks each slot's phase-2b votes until the
+# dissemination layer marks its id stable. With every id pre-stable
+# (``init_dissem(pre_stable=True)``, or saturated hold tiles) the mask is
+# the identity and the gated engine is bit-identical to the ungated one —
+# the regression baseline the tests pin down, including under recycling.
+
+
+def _gated_votes(d: DissemState, packed_votes: jax.Array) -> jax.Array:
+    """Zero the vote tile of every not-yet-stable slot. Votes are masked,
+    not buffered: DES sequencers re-multicast 2b for pending instances
+    each round, so dropped votes reappear once the id stabilizes."""
+    return jnp.where(d.stable[..., None], packed_votes, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "stab_majority", "order_budget"))
+def gated_tick(state: QuorumState, d: DissemState, packed_acks: jax.Array,
+               packed_holds: jax.Array, packed_votes: jax.Array, *,
+               diss_majority: int, seq_majority: int, stab_majority: int,
+               order_budget: int | None = None)\
+        -> tuple[QuorumState, DissemState, dict]:
+    """One fused tick of dissemination + ordering across all G groups.
+
+    packed_holds: uint32[G, W, WORDS_DP] batch-delivery bits for the
+    group's disseminator *partition* (stab_majority is a majority of that
+    partition). Holds absorb **before** votes are masked, so a vote
+    arriving in the same tick as the stabilizing delivery counts — the
+    gate adds no latency beyond the dissemination itself. Returns
+    (state, d, out) with the ungated tick's outputs plus
+    out["newly_stable"] bool[G, W]."""
+    d, dout = absorb_holds_packed(d, packed_holds, stab_majority)
+    state, out = jax.vmap(functools.partial(
+        jaxsim.engine_tick_packed, diss_majority=diss_majority,
+        seq_majority=seq_majority, order_budget=order_budget))(
+        state, packed_acks, _gated_votes(d, packed_votes))
+    return state, d, dict(out, newly_stable=dout["newly_stable"])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "stab_majority", "order_budget",
+    "max_entries"))
+def run_gated_ticks_merged(state: QuorumState, d: DissemState, merge_state,
+                           packed_acks_seq: jax.Array,
+                           packed_holds_seq: jax.Array,
+                           packed_votes_seq: jax.Array,
+                           slot_ids: jax.Array, *, diss_majority: int,
+                           seq_majority: int, stab_majority: int,
+                           order_budget: int,
+                           max_entries: int | None = None)\
+        -> tuple[QuorumState, DissemState, "merge_mod.MergeState",
+                 jax.Array, jax.Array, jax.Array]:
+    """``run_sharded_ticks_merged`` with the stability gate in the loop:
+    scan T ticks of (acks, holds, votes) traffic, feed the deterministic
+    merge, then apply the commit gate. Returns
+    (state, d, merge_state, merged, merged_count, committed_count)."""
+    max_entries = _resolve_max_entries(max_entries, order_budget)
+    vtick = jax.vmap(functools.partial(
+        jaxsim.engine_tick_packed, diss_majority=diss_majority,
+        seq_majority=seq_majority, order_budget=order_budget))
+
+    def body(carry, tv):
+        st, d, ms = carry
+        a, h, v = tv
+        d, _ = absorb_holds_packed(d, h, stab_majority)
+        st, out = vtick(st, a, _gated_votes(d, v))
+        entries, counts = merge_mod.entries_from_assigned(
+            out["assigned"], slot_ids, max_entries)
+        ms = merge_mod.append_entries(ms, entries, counts)
+        return (st, d, ms), ()
+
+    (state, d, merge_state), _ = jax.lax.scan(
+        body, (state, d, merge_state),
+        (packed_acks_seq, packed_holds_seq, packed_votes_seq))
+    merged, count = merge_mod.merged_prefix(merge_state)
+    dec_by_inst = _decided_by_instance(state.instance, state.decided,
+                                       merge_state.logs.shape[1])
+    committed = merge_mod.committed_prefix_len(merge_state, dec_by_inst)
+    return state, d, merge_state, merged, count, committed
+
+
+class GatedRecycleState(NamedTuple):
+    """Sustained gated engine: the recycled ordering state plus its
+    lockstep dissemination window — slot (g, w) of ``d`` always tracks
+    the id in ``rs.slot_ids[g, w]``; recycling compacts both with one
+    shared :class:`jaxsim.CompactionPlan` per group."""
+    rs: RecycleState
+    d: DissemState
+
+
+def init_gated_recycled(groups: int, window: int, n_diss: int, n_seq: int,
+                        *, n_diss_partition: int | None = None,
+                        id_stride: int | None = None,
+                        pre_stable: bool = False) -> GatedRecycleState:
+    """Fresh sustained gated engine. ``n_diss_partition`` sizes the hold
+    bitsets (the per-group disseminator partition, m/G; defaults to
+    ``n_diss`` — the ungated engine's disseminator count doubling as a
+    global set)."""
+    if n_diss_partition is None:
+        n_diss_partition = n_diss
+    return GatedRecycleState(
+        rs=init_recycled(groups, window, n_diss, n_seq,
+                         id_stride=id_stride),
+        d=init_dissem(groups, window, n_diss_partition,
+                      pre_stable=pre_stable))
+
+
+@functools.partial(jax.jit, static_argnames=("watermark", "id_stride",
+                                             "fresh_stable"))
+def gated_recycle_groups(gs: GatedRecycleState, *, watermark: int,
+                         id_stride: int, fresh_stable: bool = False)\
+        -> tuple[GatedRecycleState, jax.Array]:
+    """``recycle_groups`` for the gated engine: one shared per-group
+    compaction plan moves the quorum window AND the dissemination window,
+    so retired slots release their hold bitsets (zeroed) and stability
+    flags in the same shuffle. Releasing is safe by construction: only
+    decided instances retire, and a decided id passed the gate, so its
+    dissemination state is spent. Freed slots are born with empty holds
+    and ``stable=fresh_stable`` (False models real traffic — a fresh id
+    must re-earn stability; True preserves the all-pre-stable
+    bit-identity baseline across recycles)."""
+    G = gs.rs.slot_ids.shape[0]
+    free = jnp.sum(~gs.rs.q.decided, axis=1, dtype=jnp.int32)
+    head_retirable = jnp.any(
+        (gs.rs.q.instance == gs.rs.retired[:, None]) & gs.rs.q.decided,
+        axis=1)
+    enable = (free < watermark) & head_retirable
+    id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+
+    def compact(gs):
+        def per_group(q, ids, retired, base, en, holds, stab):
+            plan = jaxsim.compaction_plan(q, retired, en)
+            q, ids, retired, n_ret = jaxsim.compact_and_refill_packed(
+                q, ids, retired, base, plan=plan)
+            holds = jaxsim.apply_compaction(plan, holds, jnp.uint32(0))
+            stab = jaxsim.apply_compaction(plan, stab, fresh_stable)
+            return q, ids, retired, n_ret, holds, stab
+        q, ids, retired, n_ret, holds, stab = jax.vmap(per_group)(
+            gs.rs.q, gs.rs.slot_ids, gs.rs.retired, id_base, enable,
+            gs.d.hold_bits, gs.d.stable)
+        return (GatedRecycleState(
+            rs=RecycleState(q=q, slot_ids=ids, retired=retired),
+            d=DissemState(hold_bits=holds, stable=stab)), n_ret)
+
+    def skip(gs):
+        return gs, jnp.zeros((G,), jnp.int32)
+
+    return jax.lax.cond(jnp.any(enable), compact, skip, gs)
+
+
+def _gated_recycled_body(gs: GatedRecycleState, merge_state, packed_acks,
+                         packed_holds, packed_votes, *, diss_majority,
+                         seq_majority, stab_majority, order_budget,
+                         max_entries, watermark, id_stride, fresh_stable):
+    """One sustained gated step: absorb holds → gated tick → append to
+    merge → recycle both windows (same ordering rationale as
+    ``_recycled_body``; holds absorb first so a recycled slot saturated
+    by this tick's hold tile is already stable at vote time)."""
+    d, dout = absorb_holds_packed(gs.d, packed_holds, stab_majority)
+    vtick = jax.vmap(functools.partial(
+        jaxsim.engine_tick_packed, diss_majority=diss_majority,
+        seq_majority=seq_majority, order_budget=order_budget))
+    q, out = vtick(gs.rs.q, packed_acks, _gated_votes(d, packed_votes))
+    entries, counts = merge_mod.entries_from_assigned(
+        out["assigned"], gs.rs.slot_ids, max_entries)
+    merge_state = merge_mod.append_entries(merge_state, entries, counts)
+    gs = GatedRecycleState(
+        rs=RecycleState(q=q, slot_ids=gs.rs.slot_ids,
+                        retired=gs.rs.retired), d=d)
+    gs, n_ret = gated_recycle_groups(gs, watermark=watermark,
+                                     id_stride=id_stride,
+                                     fresh_stable=fresh_stable)
+    out = dict(out, n_retired=n_ret, newly_stable=dout["newly_stable"])
+    return gs, merge_state, out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "stab_majority", "order_budget",
+    "max_entries", "watermark", "id_stride", "fresh_stable"))
+def gated_recycled_tick_merged(gs: GatedRecycleState, merge_state,
+                               packed_acks: jax.Array,
+                               packed_holds: jax.Array,
+                               packed_votes: jax.Array, *,
+                               diss_majority: int, seq_majority: int,
+                               stab_majority: int, order_budget: int,
+                               max_entries: int | None = None,
+                               watermark: int, id_stride: int,
+                               fresh_stable: bool = False)\
+        -> tuple[GatedRecycleState, "merge_mod.MergeState", dict]:
+    """Single-step entry point of the sustained gated engine — the
+    host-driven twin of ``recycled_tick_merged`` for traffic sources that
+    address ids and must re-read ``gs.rs.slot_ids`` between ticks (the
+    DES replay does exactly this)."""
+    max_entries = _resolve_max_entries(max_entries, order_budget)
+    return _gated_recycled_body(
+        gs, merge_state, packed_acks, packed_holds, packed_votes,
+        diss_majority=diss_majority, seq_majority=seq_majority,
+        stab_majority=stab_majority, order_budget=order_budget,
+        max_entries=max_entries, watermark=watermark, id_stride=id_stride,
+        fresh_stable=fresh_stable)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "diss_majority", "seq_majority", "stab_majority", "order_budget",
+    "max_entries", "watermark", "id_stride", "fresh_stable"))
+def run_gated_recycled_ticks_merged(gs: GatedRecycleState, merge_state,
+                                    packed_acks_seq: jax.Array,
+                                    packed_holds_seq: jax.Array,
+                                    packed_votes_seq: jax.Array, *,
+                                    diss_majority: int, seq_majority: int,
+                                    stab_majority: int, order_budget: int,
+                                    max_entries: int | None = None,
+                                    watermark: int, id_stride: int,
+                                    fresh_stable: bool = False)\
+        -> tuple[GatedRecycleState, "merge_mod.MergeState", jax.Array,
+                 jax.Array, jax.Array]:
+    """Fused sustained gated hot loop: scan T gated recycled steps, then
+    gate the merged prefix. Same return contract and traffic-addressing /
+    merge-capacity caveats as ``run_recycled_ticks_merged``; the extra
+    leading input is uint32[T, G, W, WORDS_DP] hold traffic."""
+    max_entries = _resolve_max_entries(max_entries, order_budget)
+    body_kw = dict(diss_majority=diss_majority, seq_majority=seq_majority,
+                   stab_majority=stab_majority, order_budget=order_budget,
+                   max_entries=max_entries, watermark=watermark,
+                   id_stride=id_stride, fresh_stable=fresh_stable)
+
+    def body(carry, tv):
+        gs, ms = carry
+        a, h, v = tv
+        gs, ms, _ = _gated_recycled_body(gs, ms, a, h, v, **body_kw)
+        return (gs, ms), ()
+
+    (gs, merge_state), _ = jax.lax.scan(
+        body, (gs, merge_state),
+        (packed_acks_seq, packed_holds_seq, packed_votes_seq))
+    merged, count, committed = recycled_committed_prefix(gs.rs, merge_state)
+    return gs, merge_state, merged, count, committed

@@ -1,0 +1,199 @@
+"""Stability gate regression suite: the gated ordering engine
+(``repro.engine`` gated_* family) with every id pre-stable is
+bit-identical to the ungated engine — merged order AND final QuorumState
+— on random traffic, plain and under window recycling; and with unstable
+ids the gate provably withholds commits until the dissemination layer
+stabilizes them."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.engine as eng
+from repro.core import jaxsim
+from repro.dissem import init_dissem
+
+G, W, D, S = 2, 16, 5, 3
+MAJ_D, MAJ_S = 3, 2
+KW = dict(diss_majority=MAJ_D, seq_majority=MAJ_S, order_budget=4)
+
+
+def _rand_traffic(T, seed):
+    rng = np.random.default_rng(seed)
+    wa, wv = jaxsim._words(D), jaxsim._words(S)
+    acks = rng.integers(0, 2**32, (T, G, W, wa), dtype=np.uint32)
+    votes = rng.integers(0, 2**32, (T, G, W, wv), dtype=np.uint32)
+    acks &= np.uint32((1 << D) - 1)
+    votes &= np.uint32((1 << S) - 1)
+    return jnp.asarray(acks), jnp.asarray(votes)
+
+
+def _zero_holds(T):
+    return jnp.zeros((T, G, W, jaxsim._words(D)), jnp.uint32)
+
+
+def _trees_equal(a, b):
+    return bool(jax.tree.all(jax.tree.map(
+        lambda x, y: bool((x == y).all()), a, b)))
+
+
+def test_pre_stable_gated_tick_is_bit_identical():
+    acks, votes = _rand_traffic(1, seed=1)
+    st0 = eng.init_sharded(G, W, D, S)
+    s_ref, out_ref = eng.sharded_tick(st0, acks[0], votes[0], **KW)
+    s_gat, d, out_gat = eng.gated_tick(
+        st0, init_dissem(G, W, D, pre_stable=True), acks[0],
+        _zero_holds(1)[0], votes[0], stab_majority=MAJ_D, **KW)
+    assert _trees_equal(s_ref, s_gat)
+    assert (np.asarray(out_ref["assigned"])
+            == np.asarray(out_gat["assigned"])).all()
+    assert (np.asarray(out_ref["newly_decided"])
+            == np.asarray(out_gat["newly_decided"])).all()
+
+
+def test_pre_stable_merged_run_is_bit_identical():
+    T = 8
+    acks, votes = _rand_traffic(T, seed=2)
+    slot_ids = eng.sharded.default_slot_ids(G, W)
+    s1, m1, mg1, c1, cc1 = eng.run_sharded_ticks_merged(
+        eng.init_sharded(G, W, D, S), eng.init_merge(G, T * 4),
+        acks, votes, slot_ids, **KW)
+    s2, d2, m2, mg2, c2, cc2 = eng.run_gated_ticks_merged(
+        eng.init_sharded(G, W, D, S), init_dissem(G, W, D, pre_stable=True),
+        eng.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
+        stab_majority=MAJ_D, **KW)
+    assert _trees_equal(s1, s2)
+    assert _trees_equal(m1, m2)
+    assert int(c1) == int(c2) and int(cc1) == int(cc2)
+    assert (np.asarray(mg1) == np.asarray(mg2)).all()
+
+
+def test_unstable_ids_never_commit():
+    """Saturated votes, no dissemination: assignment proceeds (ordering
+    proposals are not gated) but no instance ever reaches phase-2b."""
+    T = 6
+    acks, votes = _rand_traffic(T, seed=3)
+    votes = jnp.full_like(votes, (1 << S) - 1)
+    slot_ids = eng.sharded.default_slot_ids(G, W)
+    s, d, ms, mg, cnt, committed = eng.run_gated_ticks_merged(
+        eng.init_sharded(G, W, D, S), init_dissem(G, W, D),
+        eng.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
+        stab_majority=MAJ_D, **KW)
+    assert not bool(s.decided.any())
+    assert int(committed) == 0
+    assert bool((s.instance >= 0).any()), "assignment itself is ungated"
+
+
+def test_partial_stability_gates_exactly_the_unstable_slots():
+    """One tick, full votes, holds saturating only even slots: exactly the
+    stable slots (with an instance) decide."""
+    acks, votes = _rand_traffic(1, seed=4)
+    acks = jnp.full_like(acks, (1 << D) - 1)     # assign everything
+    votes = jnp.full_like(votes, (1 << S) - 1)
+    holds = np.zeros((G, W, jaxsim._words(D)), np.uint32)
+    holds[:, ::2] = (1 << D) - 1
+    st, d, out = eng.gated_tick(
+        eng.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
+        jnp.asarray(holds), votes[0], stab_majority=MAJ_D, **KW)
+    dec = np.asarray(st.decided)
+    stable = np.asarray(d.stable)
+    has_inst = np.asarray(st.instance) >= 0
+    assert (dec == (stable & has_inst)).all()
+    assert stable[:, ::2].all() and not stable[:, 1::2].any()
+
+
+def test_same_tick_stabilize_then_vote_counts():
+    """Holds absorb before votes are masked: a slot whose stabilizing
+    delivery and commit votes land in the same tick decides that tick."""
+    acks, votes = _rand_traffic(1, seed=5)
+    acks = jnp.full_like(acks, (1 << D) - 1)
+    votes = jnp.full_like(votes, (1 << S) - 1)
+    holds = jnp.full((G, W, jaxsim._words(D)), (1 << D) - 1, jnp.uint32)
+    st, d, out = eng.gated_tick(
+        eng.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
+        holds, votes[0], stab_majority=MAJ_D,
+        **dict(KW, order_budget=None))
+    assert bool(d.stable.all())
+    assert bool(st.decided.all())
+
+
+def test_recycled_pre_stable_is_bit_identical():
+    """Sustained engines, saturated backlog traffic across several window
+    generations: ungated recycled vs gated recycled with pre-stable ids
+    and stable-born fresh slots — identical RecycleState, merge state,
+    merged order, commit gate."""
+    T = 20
+    stride = 10_000
+    wa, wv = jaxsim._words(D), jaxsim._words(S)
+    sat_a = jnp.full((T, G, W, wa), (1 << D) - 1, jnp.uint32)
+    sat_v = jnp.full((T, G, W, wv), (1 << S) - 1, jnp.uint32)
+    rkw = dict(**KW, watermark=8, id_stride=stride)
+    r, rm, rmg, rc, rcc = eng.run_recycled_ticks_merged(
+        eng.init_recycled(G, W, D, S, id_stride=stride),
+        eng.init_merge(G, T * 4), sat_a, sat_v, **rkw)
+    g, gm, gmg, gc, gcc = eng.run_gated_recycled_ticks_merged(
+        eng.init_gated_recycled(G, W, D, S, id_stride=stride,
+                                pre_stable=True),
+        eng.init_merge(G, T * 4), sat_a, _zero_holds(T), sat_v,
+        stab_majority=MAJ_D, fresh_stable=True, **rkw)
+    assert _trees_equal(r, g.rs)
+    assert _trees_equal(rm, gm)
+    assert int(rc) == int(gc) and int(rcc) == int(gcc)
+    assert (np.asarray(rmg) == np.asarray(gmg)).all()
+    assert int(np.asarray(r.retired).sum()) > 0, "recycling must have fired"
+
+
+def test_recycled_saturated_holds_match_ungated_throughput():
+    """fresh_stable=False with per-tick saturated hold tiles: recycled
+    fresh slots re-earn stability the same tick, so the gated engine's
+    sustained merged output still equals the ungated engine's."""
+    T = 20
+    stride = 10_000
+    wa, wv = jaxsim._words(D), jaxsim._words(S)
+    sat_a = jnp.full((T, G, W, wa), (1 << D) - 1, jnp.uint32)
+    sat_v = jnp.full((T, G, W, wv), (1 << S) - 1, jnp.uint32)
+    sat_h = jnp.full((T, G, W, wa), (1 << D) - 1, jnp.uint32)
+    rkw = dict(**KW, watermark=8, id_stride=stride)
+    r, rm, rmg, rc, rcc = eng.run_recycled_ticks_merged(
+        eng.init_recycled(G, W, D, S, id_stride=stride),
+        eng.init_merge(G, T * 4), sat_a, sat_v, **rkw)
+    g, gm, gmg, gc, gcc = eng.run_gated_recycled_ticks_merged(
+        eng.init_gated_recycled(G, W, D, S, id_stride=stride),
+        eng.init_merge(G, T * 4), sat_a, sat_h, sat_v,
+        stab_majority=MAJ_D, **rkw)
+    assert int(rc) == int(gc) and int(rcc) == int(gcc)
+    assert (np.asarray(rmg)[:int(rc)] == np.asarray(gmg)[:int(gc)]).all()
+
+
+def test_recycle_releases_dissemination_state():
+    """Retiring slots drops their hold bitsets: after a recycle the freed
+    tail is born with empty holds and unstable flags while surviving
+    slots keep theirs — one shared compaction plan moves both windows."""
+    stride = 10_000
+    gs = eng.init_gated_recycled(1, 8, D, S, id_stride=stride)
+    wa, wv = jaxsim._words(D), jaxsim._words(S)
+    sat_a = jnp.full((1, 8, wa), (1 << D) - 1, jnp.uint32)
+    sat_v = jnp.full((1, 8, wv), (1 << S) - 1, jnp.uint32)
+    # stabilize + decide only slots 0..3 (the contiguous decided prefix)
+    holds = np.zeros((1, 8, wa), np.uint32)
+    holds[:, :4] = (1 << D) - 1
+    ms = eng.init_merge(1, 64)
+    gs, ms, out = eng.gated_recycled_tick_merged(
+        gs, ms, sat_a, jnp.asarray(holds), sat_v, stab_majority=MAJ_D,
+        watermark=8, id_stride=stride, **KW)
+    assert int(np.asarray(out["n_retired"])[0]) == 4
+    # slot 4..7 (previously unstable, still live) kept their state at
+    # compacted positions 0..3; freed tail 4..7 is clean
+    stable = np.asarray(gs.d.stable)[0]
+    hold_bits = np.asarray(gs.d.hold_bits)[0]
+    assert not stable.any()
+    assert (hold_bits == 0).all()
+    # now stabilize the survivors only: positions 0..3 hold old live ids
+    holds2 = np.zeros((1, 8, wa), np.uint32)
+    holds2[:, :4] = (1 << D) - 1
+    gs, ms, out = eng.gated_recycled_tick_merged(
+        gs, ms, sat_a, jnp.asarray(holds2), sat_v, stab_majority=MAJ_D,
+        watermark=0, id_stride=stride, **KW)
+    assert np.asarray(gs.d.stable)[0, :4].all()
+    assert not np.asarray(gs.d.stable)[0, 4:].any()

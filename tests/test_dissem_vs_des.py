@@ -1,0 +1,158 @@
+"""DES ↔ dissemination-engine cross-validation.
+
+Tap the DES LAN-1 for every "batch" delivery to a disseminator node
+(``Lan.taps`` — the payload-level sibling of ``delivery_log``), replay
+that traffic through ``repro.dissem``'s vectorized stability engine, and
+assert the engine derives the *same per-group stable-id sets* as the DES
+sequencers (``stable_set`` ∪ ``decided_ids`` — step 36's precondition
+computed two completely different ways: id-multicast counting in the DES
+vs packed-bitset popcount majority in the engine).
+
+Then close the loop end-to-end: feed the same delivery traffic as hold
+tiles into the *gated* ordering engine (stability phase first, ordering
+replay after) and assert its committed merged order equals every DES
+learner's executed bid order — the gated path reproduces the full
+protocol pipeline client → disseminator → stability → ordering → merge.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_engine_vs_des import NOOP, group_instance_streams
+
+import repro.engine as eng
+from repro.core.htpaxos import HTConfig, HTPaxosSim
+from repro.dissem import init_dissem, run_stability_ticks
+from repro.engine import router
+
+N_DISS = 5
+MAJ = N_DISS // 2 + 1
+
+
+def run_des_tapped(G, seed=0):
+    """test_engine_vs_des.run_des with a LAN-1 delivery tap installed
+    before the run: records (time, disseminator index, bid) for every
+    batch payload a disseminator receives (multicasts and resends)."""
+    cfg = HTConfig(n_diss=N_DISS, n_seq=3, n_learners=1, n_clients=6,
+                   batch_size=2, seed=seed, n_groups=G)
+    cfg.ordering.order_batch_max = 1
+    sim = HTPaxosSim(cfg, requests_per_client=4, client_gap=10.0)
+    diss_index = {d: i for i, d in enumerate(sim.diss_ids)}
+    deliveries = []
+    sim.lan1.taps.append(
+        lambda now, dst, msg: deliveries.append(
+            (now, diss_index[dst], msg.payload["bid"]))
+        if msg.kind == "batch" and dst in diss_index else None)
+    sim.run(until=6_000)
+    return sim, deliveries
+
+
+def des_stable_sets(sim, G):
+    """Per-group stable ids as the DES sequencers saw them (decided ids
+    left ``stable_set`` on decide, so the union restores step 36's full
+    precondition set)."""
+    out = []
+    for grp in sim.seq_groups:
+        s = set()
+        for sid in grp:
+            st = sim.agents[sid].stable
+            s |= st["stable_set"] | st["decided_ids"]
+        out.append(s)
+    return out
+
+
+def hold_ticks_from_deliveries(deliveries, bid_slot, G, W):
+    """Time-bucketed uint32[T, G, W, 1] hold tiles from tap records."""
+    times = sorted({t for t, _, _ in deliveries})
+    bucket = {t: k for k, t in enumerate(times)}
+    holds = np.zeros((max(len(times), 1), G, W, 1), np.uint32)
+    for t, node, bid in deliveries:
+        g, w = bid_slot[bid]
+        holds[bucket[t], g, w, 0] |= np.uint32(1) << np.uint32(node)
+    return holds
+
+
+def slot_map_from_streams(streams, G):
+    """Slot (g, k) holds group g's k-th real (non-NOOP) decided bid —
+    the exact slot layout of test_engine_vs_des.replay_through_engine."""
+    real = [[b for b in s if b != NOOP] for s in streams]
+    W = max(max((len(r) for r in real), default=1), 1)
+    bid_slot = {b: (g, k) for g, r in enumerate(real)
+                for k, b in enumerate(r)}
+    return real, bid_slot, W
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_dissem_replay_matches_des_stable_sets(G):
+    sim, deliveries = run_des_tapped(G)
+    assert sim.total_replied() == 6 * 4
+    streams = group_instance_streams(sim)
+    real, bid_slot, W = slot_map_from_streams(streams, G)
+    # every delivered batch belongs to a decided slot of its routed group
+    for _, _, bid in deliveries:
+        g, _ = bid_slot[bid]
+        assert router.route_id(bid, G) == g
+    holds = hold_ticks_from_deliveries(deliveries, bid_slot, G, W)
+    st, outs = run_stability_ticks(init_dissem(G, W, N_DISS),
+                                  jnp.asarray(holds), majority=MAJ)
+    stable = np.asarray(st.stable)
+    engine_sets = [
+        {r[w] for w in range(len(r)) if stable[g, w]}
+        for g, r in enumerate(real)]
+    assert engine_sets == des_stable_sets(sim, G)
+    # the engine never stabilizes an id before its majority-th delivery
+    sched = np.asarray(outs["newly_stable"])
+    times = sorted({t for t, _, _ in deliveries})
+    for bid, (g, w) in bid_slot.items():
+        ticks = np.flatnonzero(sched[:, g, w])
+        if len(ticks):
+            seen = {n for t, n, b in deliveries
+                    if b == bid and t <= times[ticks[0]]}
+            assert len(seen) >= MAJ
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_gated_engine_matches_des_learners_end_to_end(G):
+    """Full-pipeline replay: stability phase (tap traffic) then ordering
+    phase (decided streams) through the *gated* engine; the committed
+    merged order must equal every DES learner's executed order."""
+    sim, deliveries = run_des_tapped(G)
+    streams = group_instance_streams(sim)
+    real, bid_slot, W = slot_map_from_streams(streams, G)
+    bid_table = [b for r in real for b in r]
+    bid_to_int = {b: i for i, b in enumerate(bid_table)}
+    slot_ids = np.full((G, W), len(bid_table), np.int32)
+    for b, (g, k) in bid_slot.items():
+        slot_ids[g, k] = bid_to_int[b]
+
+    TH = max(len({t for t, _, _ in deliveries}), 1)
+    TO = max((len(s) for s in streams), default=0)
+    T = TH + TO
+    holds = np.zeros((T, G, W, 1), np.uint32)
+    holds[:TH] = hold_ticks_from_deliveries(deliveries, bid_slot, G, W)
+    acks = np.zeros((T, G, W, 1), np.uint32)
+    for g, s in enumerate(streams):
+        k = 0
+        for t, b in enumerate(s):
+            if b != NOOP:
+                acks[TH + t, g, k, 0] = 0xFFFFFFFF
+                k += 1
+    votes = np.full((T, G, W, 1), 0xFFFFFFFF, np.uint32)
+
+    st, d, ms, merged, cnt, committed = eng.run_gated_ticks_merged(
+        eng.init_sharded(G, W, N_DISS, 3), init_dissem(G, W, N_DISS),
+        eng.init_merge(G, max(T, 1)), jnp.asarray(acks),
+        jnp.asarray(holds), jnp.asarray(votes), jnp.asarray(slot_ids),
+        diss_majority=MAJ, seq_majority=2, stab_majority=MAJ,
+        order_budget=1)
+    # dissemination stabilized every decided id before ordering replayed it
+    assert bool(np.asarray(d.stable)[np.asarray(slot_ids)
+                                     < len(bid_table)].all())
+    assert int(committed) == int(cnt) == len(bid_table)
+    engine_order = [bid_table[i]
+                    for i in np.asarray(merged)[:int(committed)]]
+    learners = sim.all_learner_agents()
+    assert learners
+    for a in learners:
+        assert a.executed_bid_order == engine_order, a.node_id
