@@ -22,6 +22,10 @@ figure-level quantity the paper plots).
           per-node replication bandwidth, partitioned (G partitions of
           m/G) vs global disseminator sets at equal total batch load —
           written to BENCH_sharded_dissemination.json
+  membership  dynamic group membership (repro.engine.epochs): recycled
+          engine ids/s across a live drain-then-switch epoch flip
+          (active rows 2→3) vs an always-static 3-group fleet — written
+          to BENCH_membership.json
   kernels interpret-mode kernel sanity timings
 
 Run everything (``python benchmarks/run.py``) or one bench by its short
@@ -375,6 +379,121 @@ def bench_sustained_engine() -> None:
     _write_bench_json("BENCH_window_recycling.json", rows)
 
 
+def bench_membership() -> None:
+    """Dynamic group membership (repro.engine.epochs): ordering
+    throughput across a live epoch flip, vs a statically-provisioned
+    fleet.
+
+    A recycled 3-row engine starts with active rows (0, 1) under
+    saturated traffic, fully drains, drain-then-switches to (0, 1, 2)
+    (``reconfigure_recycled``: one RECONFIG marker round, removed-row
+    sealing, re-homing — all host-side between jitted segments), then
+    keeps ordering with all three rows saturated. Acceptance: the
+    post-flip ids/s is ≥90% of an identical engine that ran with all
+    three rows active from t=0 — i.e. joining a group mid-run costs at
+    most the flip itself, not steady-state throughput."""
+    import jax
+    import jax.numpy as jnp
+    import repro.engine as E
+    from repro.engine import epochs as EP
+
+    G, Wg, D, SEQ, BUDGET, T = 3, 512, 64, 16, 32, 32
+    words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
+    STRIDE = 1 << 22
+    table = EP.EpochTable(((0, 1), (0, 1, 2)), n_rows=G)
+    kw = dict(diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
+              order_budget=BUDGET, watermark=Wg // 2, id_stride=STRIDE)
+    cap = 8 * T * BUDGET
+
+    def traffic(active):
+        # saturated acks on the active rows only; votes everywhere
+        acks = np.zeros((T, G, Wg, words_d), np.uint32)
+        for g in active:
+            acks[:, g] = 0xFFFFFFFF
+        votes = np.full((T, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
+        return jnp.asarray(acks), jnp.asarray(votes)
+
+    tr_pre, tr_post = traffic(table.active[0]), traffic(table.active[1])
+
+    def segment(rs, ms, tr):
+        rs, ms, _, _, com = E.run_recycled_ticks_merged(
+            rs, ms, tr[0], tr[1], **kw)
+        jax.block_until_ready(com)
+        return rs, ms, int(com)
+
+    def timed(rs, ms, tr):
+        t0 = time.perf_counter()
+        rs, ms, com = segment(rs, ms, tr)
+        return rs, ms, com, time.perf_counter() - t0
+
+    # warm the jit on throwaway state
+    segment(E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE),
+            E.init_merge(G, cap), tr_pre)
+
+    # epoch 0: two active rows
+    rs = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
+    ms = E.init_merge(G, cap)
+    rs, ms, com_pre, t_pre = timed(rs, ms, tr_pre)
+    pre_rate = com_pre / t_pre
+    # full drain before the switch (saturated votes usually land
+    # in-segment; tick vote-only for any tail)
+    za = jnp.zeros((G, Wg, words_d), jnp.uint32)
+    zv = jnp.full((G, Wg, words_s), jnp.uint32(0xFFFFFFFF))
+    drain_ticks = 0
+    while not EP.is_drained(rs.q) and drain_ticks < 32:
+        rs, ms, _ = E.recycled_tick_merged(rs, ms, za, zv, **kw)
+        drain_ticks += 1
+    assert EP.is_drained(rs.q), "drain did not converge"
+    # the flip (host-side control plane)
+    t0 = time.perf_counter()
+    rs, ms, report = EP.reconfigure_recycled(
+        rs, ms, table, 0, 1, id_stride=STRIDE)
+    flip_us = (time.perf_counter() - t0) * 1e6
+    com_flip = int(E.recycled_committed_prefix(rs, ms)[2])
+    # epoch 1: all three rows
+    rs, ms, com_post, t_post = timed(rs, ms, tr_post)
+    post_rate = (com_post - com_flip) / t_post
+
+    # static baseline: all three rows active from t=0; steady-state rate
+    # from the second generation segment (matching the post-flip segment,
+    # which also runs on a warm engine)
+    rs_s = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
+    ms_s = E.init_merge(G, cap)
+    rs_s, ms_s, com_s1, _ = timed(rs_s, ms_s, tr_post)
+    rs_s, ms_s, com_s2, t_s2 = timed(rs_s, ms_s, tr_post)
+    static_rate = (com_s2 - com_s1) / t_s2
+
+    ratio = post_rate / static_rate
+    emit("membership/pre_flip_G=2", t_pre * 1e6,
+         f"{pre_rate:.0f} ids/s ({com_pre} ids)")
+    emit("membership/flip", flip_us,
+         f"moved={report['moved']} marker_round={report['marker_round']} "
+         f"drain_ticks={drain_ticks}")
+    emit("membership/post_flip_G=3", t_post * 1e6,
+         f"{post_rate:.0f} ids/s ({com_post - com_flip} ids)")
+    emit("membership/static_G=3", t_s2 * 1e6,
+         f"{static_rate:.0f} ids/s ({com_s2 - com_s1} ids)")
+    emit("membership/post_flip_vs_static", 0.1,
+         f"{ratio:.3f} (acceptance bar: >=0.90; ids/segment are exact — "
+         "wall-time jitter on a loaded host is the only variance)")
+    _write_bench_json("BENCH_membership.json", [{
+        "name": "membership", "G_max": G, "window_per_group": Wg,
+        "order_budget": BUDGET, "ticks_per_segment": T,
+        "active_pre": list(table.active[0]),
+        "active_post": list(table.active[1]),
+        "pre_flip_ids": com_pre, "pre_flip_ids_per_sec": pre_rate,
+        "flip_drain_ticks": drain_ticks, "flip_us": flip_us,
+        "flip_moved": report["moved"],
+        "flip_marker_round": report["marker_round"],
+        "post_flip_ids": com_post - com_flip,
+        "post_flip_ids_per_sec": post_rate,
+        "static_ids": com_s2 - com_s1,
+        "static_ids_per_sec": static_rate,
+        "post_flip_vs_static": ratio,
+        "meets_bar": bool(ratio >= 0.9),
+    }])
+
+
 def bench_kernels() -> None:
     import jax
     import jax.numpy as jnp
@@ -483,7 +602,7 @@ BENCHES = {
     "delays": bench_delays, "sim_throughput": bench_sim_throughput,
     "engine": bench_engine, "sharded_engine": bench_sharded_engine,
     "sustained_engine": bench_sustained_engine, "dissem": bench_dissem,
-    "kernels": bench_kernels,
+    "membership": bench_membership, "kernels": bench_kernels,
 }
 
 

@@ -29,6 +29,18 @@ with a *strict deterministic round-robin* over per-group instance cursors.
 Idle group leaders fill their logs with explicit no-op (skip) instances so
 a slow group cannot stall the merged log unboundedly — the skips are
 decided in-band, which is what keeps the merge identical at every learner.
+
+Dynamic group membership (``reconfig_schedule``, §5.5's elasticity claim —
+see ``repro.engine.epochs`` for the engine twin): ``n_groups`` is the
+*physical* group count; an :class:`repro.engine.epochs.EpochTable` names
+the rows active per epoch. A scheduled reconfiguration is an admin
+control-plane event: it bumps every disseminator's routing epoch and has
+each group's leader decide an in-band ``__reconfig_<e>__`` marker, the
+DES twin of the engine's RECONFIG merge-log row. Ownership is
+**drain-then-switch**: each batch's routing epoch is pinned at batch
+origin and travels with the batch message, so in-flight old-epoch ids
+keep draining to their old owner groups while new batches route by the
+new assignment — no view change, no id is ever ordered by two groups.
 """
 from __future__ import annotations
 
@@ -40,7 +52,23 @@ from typing import Optional
 from .agents import Agent, SimBase
 from .classic import NOOP, OrderingConfig, PaxosSequencer
 from .network import ID_BYTES, Lan, Msg, OVERHEAD
+from ..engine.epochs import EpochTable, route_id_epoch
 from ..engine.router import partition_ids
+
+
+def is_control_bid(bid) -> bool:
+    """True for in-band control values that hold an ordering instance but
+    never execute: the ``__noop__`` skip and ``__reconfig_<e>__`` epoch
+    markers. Control bids have no payload batch and are dropped from every
+    learner-facing order (the DES twin of the engine's SKIP/RECONFIG
+    tokens)."""
+    return isinstance(bid, str) and bid.startswith("__")
+
+
+def reconfig_bid(epoch: int) -> str:
+    """The in-band epoch-boundary marker decided by every group at a
+    membership switch."""
+    return f"__reconfig_{epoch}__"
 
 
 @dataclass
@@ -71,6 +99,15 @@ class HTConfig:
     # idle leaders decide explicit no-op (skip) instances at this period so
     # a quiet group cannot stall the learners' round-robin merge
     group_skip_interval: float = 4.0
+    # dynamic membership (engine.epochs twin). initial_active names the
+    # group rows active in epoch 0 (None → all n_groups rows, the exact
+    # static-membership seed path). reconfig_schedule is a tuple of
+    # (time, active_rows) pairs: at each time an admin event switches the
+    # routing epoch to the given row set and every group leader decides an
+    # in-band __reconfig__ marker. Rows must all be < n_groups — physical
+    # groups are never created or destroyed mid-run, only (de)activated.
+    initial_active: Optional[tuple] = None
+    reconfig_schedule: tuple = ()
 
 
 def batch_bytes(n_requests: int, request_bytes: int) -> int:
@@ -162,7 +199,7 @@ class MergedExecutionMixin:
             key = (g, self._exec_cursor[g])
             if key not in log:
                 break
-            bids = [b for b in log[key] if b != "__noop__"]
+            bids = [b for b in log[key] if not is_control_bid(b)]
             if any(b not in rs for b in bids):
                 break  # wait for payload pull (Δ4/Δ5 machinery)
             for bid in bids:
@@ -195,6 +232,13 @@ class DissNode(MergedExecutionMixin, Agent):
         self.stable.setdefault("requests_set", {})   # batch_id -> tuple(rid)
         self.stable.setdefault("decided_ids", set())
         self.stable.setdefault("instance_log", {})   # instance -> tuple(bid)
+        # batch_id -> routing epoch, pinned once at batch origin and learned
+        # by every other disseminator from the batch message itself. Stable
+        # (survives crashes) so Δ2 rebroadcasts after a restart still route
+        # an old id to its old owner group — the drain half of
+        # drain-then-switch.
+        self.stable.setdefault("bid_epoch", {})
+        self.epoch = sim.current_epoch               # routing epoch for NEW batches
         self.next_batch = 0
         # volatile
         self.pending_requests: list[tuple] = []      # rids awaiting batching
@@ -237,7 +281,8 @@ class DissNode(MergedExecutionMixin, Agent):
                 self._batch_timer_armed = True
                 self.after(self.cfg.batch_linger, self._flush_batch)
         elif k == "batch":                                    # [steps 15–18]
-            self._on_batch(p["bid"], p["rids"], msg.src)
+            self._on_batch(p["bid"], p["rids"], msg.src,
+                           p.get("epoch", 0))
         elif k == "batch_ack":                                # [step 20]
             bid = p["bid"]
             if bid in self.own_acks:
@@ -251,7 +296,8 @@ class DissNode(MergedExecutionMixin, Agent):
             if rids is not None:
                 self.send(self.hsim.lan1, msg.src, "batch",
                           size=batch_bytes(len(rids), self.cfg.request_bytes),
-                          bid=bid, rids=rids)
+                          bid=bid, rids=rids,
+                          epoch=self.stable["bid_epoch"].get(bid, 0))
         elif k == "decision":                                 # ordering layer
             self._on_decision(p["entries"],
                               self.hsim.group_of_seq.get(msg.src, 0))
@@ -272,17 +318,24 @@ class DissNode(MergedExecutionMixin, Agent):
         self.next_batch += 1
         self.own_batches[bid] = rids
         self.own_acks[bid] = set()
+        # pin the routing epoch at batch origin; the pin travels with every
+        # copy of the batch message (incl. Δ5 resends) so all disseminators
+        # id-multicast this bid to the same owner group forever
+        epoch = self.stable["bid_epoch"].setdefault(bid, self.epoch)
         # [step 14] multicast batch to all disseminators and learners, LAN-1
         # (self included — the paper counts self-delivery, §5.1.1.1)
         dsts = self.hsim.diss_ids + self.hsim.learner_ids
         self.multicast(self.hsim.lan1, dsts, "batch",
                        size=batch_bytes(len(rids), self.cfg.request_bytes),
-                       bid=bid, rids=rids)
+                       bid=bid, rids=rids, epoch=epoch)
 
-    def _on_batch(self, bid, rids, src) -> None:
+    def _on_batch(self, bid, rids, src, epoch: int = 0) -> None:
         rs = self.stable["requests_set"]
         known = bid in rs
         rs[bid] = rids                                         # [step 16]
+        # first-writer-wins: the origin's pin arrived with the message; a
+        # stale duplicate can never re-route an already-pinned bid
+        self.stable["bid_epoch"].setdefault(bid, epoch)
         self.id_seen_from[bid] = src
         if bid not in self.stable["decided_ids"]:
             self.undecided_known.add(bid)
@@ -303,8 +356,9 @@ class DissNode(MergedExecutionMixin, Agent):
             return
         ids = tuple(self.id_outbox)
         self.id_outbox = []
-        # [step 18] each id goes only to its owning ordering group
-        for g, gids in self.hsim.ids_by_group(ids):
+        # [step 18] each id goes only to its owning ordering group (owner
+        # resolved through the bid's pinned epoch, not the current one)
+        for g, gids in self.hsim.ids_by_group(ids, self.stable["bid_epoch"]):
             self.multicast(self.hsim.lan2, self.hsim.seq_groups[g], "ids",
                            size=OVERHEAD + ID_BYTES * len(gids), ids=gids)
 
@@ -313,7 +367,7 @@ class DissNode(MergedExecutionMixin, Agent):
         if not self.undecided_known:
             return
         ids = tuple(sorted(self.undecided_known))
-        for g, gids in self.hsim.ids_by_group(ids):
+        for g, gids in self.hsim.ids_by_group(ids, self.stable["bid_epoch"]):
             self.multicast(self.hsim.lan2, self.hsim.seq_groups[g], "ids",
                            size=OVERHEAD + ID_BYTES * len(gids), ids=gids)
 
@@ -371,7 +425,7 @@ class DissNode(MergedExecutionMixin, Agent):
                 continue
             log[(group, inst)] = value
             for bid in value:
-                if bid == "__noop__":
+                if is_control_bid(bid):
                     continue
                 self.stable["decided_ids"].add(bid)
                 self.undecided_known.discard(bid)
@@ -401,6 +455,7 @@ class DissNode(MergedExecutionMixin, Agent):
         self.pending_requests = []
         self.own_acks = {}
         self.id_outbox = []
+        self.epoch = self.hsim.current_epoch   # re-learn the routing epoch
         self._batch_timer_armed = False
         self._id_timer_armed = False
         self._init_merged_exec(self.hsim.cfg.n_groups)
@@ -447,7 +502,7 @@ class LearnerNode(MergedExecutionMixin, Agent):
             if inst < self._exec_cursor[g]:
                 continue
             for bid in value:
-                if bid != "__noop__" and bid not in rs:
+                if not is_control_bid(bid) and bid not in rs:
                     tgt = self.rng.choice(self.hsim.diss_ids)
                     self.send(self.hsim.lan2, tgt, "resend",
                               size=OVERHEAD + ID_BYTES, bid=bid)
@@ -504,6 +559,18 @@ class HTSequencer(PaxosSequencer):
         self._propose(self.next_instance, NOOP)
         self.next_instance += 1
 
+    def propose_marker(self, epoch: int) -> None:
+        """Decide the in-band ``__reconfig_<epoch>__`` marker — the DES
+        twin of the engine's RECONFIG merge-log row. Called by the admin
+        reconfiguration event on each group's current leader; consumes one
+        ordering instance and rides the normal Paxos pipeline, so every
+        learner sees the epoch boundary at a group-consistent merge
+        position."""
+        if not self.is_leader or self.recovery_pending:
+            return
+        self._propose(self.next_instance, (reconfig_bid(epoch),))
+        self.next_instance += 1
+
     def on_restart(self) -> None:
         self._skip_armed = False        # timers are volatile across crashes
         super().on_restart()
@@ -545,7 +612,7 @@ class HTSequencer(PaxosSequencer):
 
     def on_decide(self, instance: int, value) -> None:
         for bid in value:
-            if bid != "__noop__":
+            if not is_control_bid(bid):
                 self.stable["decided_ids"].add(bid)
                 self.stable["stable_set"].discard(bid)
 
@@ -555,7 +622,7 @@ class HTSequencer(PaxosSequencer):
         fifo = self.stable["stable_ids"]
         for value in values:
             for bid in value:
-                if bid != "__noop__" and \
+                if not is_control_bid(bid) and \
                         bid not in self.stable["decided_ids"] and \
                         bid not in fifo:
                     fifo.append(bid)
@@ -585,6 +652,18 @@ class HTPaxosSim(SimBase):
             raise ValueError(
                 "fault_tolerant_colocation with n_groups > 1 is not "
                 "supported (undefined site mapping)")
+        # dynamic membership: epoch 0 is initial_active (default: all rows);
+        # each reconfig_schedule entry appends one epoch. The table is the
+        # single source of truth shared with the engine twin
+        # (repro.engine.epochs.EpochTable).
+        active0 = tuple(cfg.initial_active) if cfg.initial_active is not None \
+            else tuple(range(cfg.n_groups))
+        self.epoch_table = EpochTable(
+            (active0, *(tuple(a) for _t, a in cfg.reconfig_schedule)),
+            n_rows=cfg.n_groups)
+        self.current_epoch = 0
+        self._trivial_epochs = (self.epoch_table.n_epochs == 1
+                                and active0 == tuple(range(cfg.n_groups)))
         self.diss_ids = [f"d{i}" for i in range(cfg.n_diss)]
         # ordering groups: group 0 keeps the paper's s0..s{n-1} naming (the
         # exact single-group topology when n_groups == 1); extra groups are
@@ -621,6 +700,25 @@ class HTPaxosSim(SimBase):
         self.attach_all()
         for s in self.sequencers:
             s.start()
+        # admin reconfiguration events (sim constructed at t=0, so the
+        # schedule's absolute times are also delays)
+        for k, (t, _active) in enumerate(cfg.reconfig_schedule):
+            self.sched.after(t, lambda e=k + 1: self._apply_reconfig(e))
+
+    def _apply_reconfig(self, epoch: int) -> None:
+        """Admin control-plane event at a scheduled membership switch:
+        bump every live disseminator's routing epoch (new batches route by
+        the new assignment; bids pinned to older epochs keep draining to
+        their old owner groups — §5.5: no view change) and have every
+        group's leader decide the in-band epoch marker."""
+        self.current_epoch = epoch
+        for d in self.disseminators:
+            if d.alive:
+                d.epoch = epoch
+        for g in range(self.cfg.n_groups):
+            ldr = self.group_leader(g)
+            if ldr is not None:
+                ldr.propose_marker(epoch)
 
     # -- convenience ----------------------------------------------------------
 
@@ -637,17 +735,29 @@ class HTPaxosSim(SimBase):
                 return s
         return None
 
-    def ids_by_group(self, ids) -> list[tuple[int, tuple]]:
+    def ids_by_group(self, ids, bid_epoch=None) -> list[tuple[int, tuple]]:
         """Partition batch_ids by owning ordering group via
         ``engine.router.partition_ids`` (crc32 on the id's repr — note the
         engine's vectorized ``route_ids`` is a *different* hash for uint32
         arrays; cross-validating DES against the engine must route both
         sides with ``route_id``). Returns only non-empty (group,
-        ids-tuple) pairs, group-ascending."""
-        if self.cfg.n_groups == 1:
-            return [(0, tuple(ids))]
-        return [(g, tuple(part)) for g, part in
-                enumerate(partition_ids(ids, self.cfg.n_groups)) if part]
+        ids-tuple) pairs, group-ascending.
+
+        With dynamic membership, ``bid_epoch`` maps each bid to its pinned
+        routing epoch and the owner is ``route_id_epoch`` over the sim's
+        epoch table (an unpinned bid defaults to epoch 0). The static
+        single-epoch all-rows-active table keeps the exact legacy
+        ``partition_ids`` path, bit-for-bit."""
+        if self._trivial_epochs or bid_epoch is None:
+            if self.cfg.n_groups == 1:
+                return [(0, tuple(ids))]
+            return [(g, tuple(part)) for g, part in
+                    enumerate(partition_ids(ids, self.cfg.n_groups)) if part]
+        parts: list[list] = [[] for _ in range(self.cfg.n_groups)]
+        for bid in ids:
+            g = route_id_epoch(bid, self.epoch_table, bid_epoch.get(bid, 0))
+            parts[g].append(bid)
+        return [(g, tuple(p)) for g, p in enumerate(parts) if p]
 
     def group_decided_orders(self) -> list[list]:
         """Canonical per-group bid order: each group's decided log sorted by
@@ -659,7 +769,7 @@ class HTPaxosSim(SimBase):
             for s in grp:
                 log.update(self.agents[s].stable["decided_log"])
             orders.append([bid for inst in sorted(log) for bid in log[inst]
-                           if bid != "__noop__"])
+                           if not is_control_bid(bid)])
         return orders
 
     def check_merged_interleaving(self) -> list:

@@ -87,6 +87,29 @@ def check_legal_interleaving(merged: list, group_orders: list[list]) -> list:
     return out
 
 
+def check_unique_ownership(group_orders: list[list]) -> list:
+    """Dynamic-membership safety (repro.engine.epochs / §5.5): an id must
+    be ordered by exactly one group exactly once, even across an epoch
+    switch that moves its ownership. Pinned-epoch routing guarantees this
+    (a bid's owner is resolved through the epoch recorded at batch origin);
+    a violation means an id was double-routed or re-ordered after a
+    re-home. Returns ("cross", id, g1, g2) for an id decided by two groups
+    and ("dup", id, g) for an id decided twice by one group."""
+    out = []
+    first: dict = {}
+    for g, order in enumerate(group_orders):
+        seen: set = set()
+        for x in order:
+            if x in seen:
+                out.append(("dup", x, g))
+                continue
+            seen.add(x)
+            if x in first and first[x] != g:
+                out.append(("cross", x, first[x], g))
+            first.setdefault(x, g)
+    return out
+
+
 def audit(sequences: dict[str, list], issued: set | None = None)\
         -> AuditReport:
     rep = AuditReport()

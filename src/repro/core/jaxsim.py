@@ -150,6 +150,29 @@ def engine_tick_packed(state: QuorumState, packed_acks: jax.Array,
     return state, {"assigned": assigned, "newly_decided": newly_decided}
 
 
+def admitted_mask(state: QuorumState) -> jax.Array:
+    """bool[..., W]: slots carrying observed dissemination/ordering state
+    — nonzero ack bits, stability, an assigned instance, or a decision.
+    Fresh (init or recycling-refilled) slots are *not* admitted: their id
+    was issued but no node has acted on it. Shape-polymorphic over
+    leading axes (the sharded engine's [G, W, ...] layout broadcasts
+    through).
+
+    Phase-2b vote bits are deliberately excluded: a 2b vote is only
+    meaningful for an assigned instance, so stray vote bits on an
+    unordered slot (e.g. from the saturated-vote-tile idiom the tests and
+    benches use) carry no protocol information and must not make a fresh
+    slot look live.
+
+    This is the epoch-membership layer's re-homing predicate
+    (``repro.engine.epochs``): only admitted-but-unordered slots carry
+    state worth moving to a new owner group, and only unadmitted slots may
+    be overwritten as transfer destinations (any stray vote bits there are
+    zeroed by the transfer swap)."""
+    return (jnp.any(state.ack_bits != 0, axis=-1)
+            | state.stable | (state.instance >= 0) | state.decided)
+
+
 class CompactionPlan(NamedTuple):
     """Slot permutation of one recycling pass, separated from its
     application so *aux* per-slot state (e.g. ``repro.dissem``'s ack

@@ -137,3 +137,13 @@ def stable_ids(state: DissemState, slot_ids: jax.Array) -> jax.Array:
     """Global ids of currently-stable slots: int32[G, W] with -1 at
     unstable slots (fixed shape; callers filter host-side)."""
     return jnp.where(state.stable, slot_ids.astype(jnp.int32), -1)
+
+
+def dissem_admitted_mask(state: DissemState) -> jax.Array:
+    """bool[G, W]: slots with any dissemination state — at least one
+    recorded holder or an already-stable flag. The dissemination half of
+    the epoch-membership layer's admitted test (``repro.engine.epochs``):
+    a slot whose batch is partially replicated must carry its hold bitset
+    to the new owner group so the stability gate never regresses, even if
+    the ordering side has not seen an id-multicast for it yet."""
+    return jnp.any(state.hold_bits != 0, axis=-1) | state.stable

@@ -9,14 +9,24 @@ deterministically merges the G per-group orders into the single total
 order learners consume (``merge`` — round-robin with explicit skip/null
 instances so a slow group cannot stall the merged log unboundedly).
 
-``router`` is jax-free and imported eagerly (the pure-python DES uses it);
-``merge``/``sharded`` pull in jax and are loaded lazily (PEP 562) so DES
-imports stay lightweight.
+``epochs`` adds dynamic group membership: an :class:`EpochTable` pins
+per-epoch active-row sets for the router, and the ``reconfigure_*``
+control-plane functions drain-then-switch a live engine between epochs
+(RECONFIG marker row in every merge log, recycle-aware state transfer).
+
+``router`` and ``epochs`` are jax-free at import (the pure-python DES
+uses both); ``merge``/``sharded`` pull in jax and are loaded lazily
+(PEP 562) so DES imports stay lightweight.
 """
-from .router import partition_ids, route_id, route_ids
+from .router import (ROUTER_HASH_VERSION, partition_ids, route_id,
+                     route_ids, route_u32)
+from .epochs import (EpochTable, append_reconfig_marker, is_drained,
+                     reconfigure_gated_recycled, reconfigure_plain,
+                     reconfigure_recycled, route_id_epoch, route_ids_epoch)
 
 _LAZY = {
     "MergeState": "merge", "PAD": "merge", "SKIP": "merge",
+    "RECONFIG": "merge",
     "append_entries": "merge", "committed_prefix_len": "merge",
     "entries_from_assigned": "merge", "init_merge": "merge",
     "mergeable_counts": "merge", "merged_prefix": "merge",
@@ -37,7 +47,11 @@ _LAZY = {
     "run_gated_recycled_ticks_merged": "sharded",
 }
 
-__all__ = ["partition_ids", "route_id", "route_ids", *_LAZY]
+__all__ = ["ROUTER_HASH_VERSION", "partition_ids", "route_id", "route_ids",
+           "route_u32", "EpochTable", "append_reconfig_marker", "is_drained",
+           "reconfigure_gated_recycled", "reconfigure_plain",
+           "reconfigure_recycled", "route_id_epoch", "route_ids_epoch",
+           *_LAZY]
 
 
 def __getattr__(name):

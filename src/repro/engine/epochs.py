@@ -1,0 +1,460 @@
+"""Epoch-based dynamic ordering-group membership (drain-then-switch).
+
+HT-Paxos's §5.5 elasticity claim is that disseminator/learner churn needs
+no view change — the only coordination-bearing state when the cluster is
+resized is the *ordering-group ownership* of batch_ids. Multi-Ring Paxos
+(PAPERS.md [27]) realizes the same idea with per-ring subscription
+epochs; this module is that mechanism for the sharded engine:
+
+  * an :class:`EpochTable` pins, per epoch, which physical group rows are
+    *active* and how ids hash onto them — :func:`route_ids_epoch` is the
+    vectorized router (wrapping ``router.route_ids``),
+    :func:`route_id_epoch` its python twin for the DES;
+  * the switch is **drain-then-switch**: groups leaving the active set
+    first drain their ordered pipeline (every assigned instance decided —
+    :func:`is_drained`), then one :data:`merge.RECONFIG` marker row is
+    appended to *every* group's merge log at a single aligned round
+    (:func:`append_reconfig_marker`) — every learner consuming the
+    round-robin merge crosses the epoch boundary at the same position —
+    and ids still live in a window are re-homed to the rows the new
+    epoch's router names;
+  * removed rows are **sealed** (recycled variants): their decided
+    instance prefix is retired through the shared
+    :class:`jaxsim.CompactionPlan` machinery, so the commit gate recovers
+    their entire ordered history from the ``retired`` base offset alone
+    and never regresses. An inactive row afterwards is simply a
+    permanently idle group: ``entries_from_assigned`` pads it with
+    explicit SKIP tokens every tick, so the merge never stalls and
+    ``merged_prefix`` / ``committed_prefix_len`` stay monotone across the
+    flip with **zero** changes to the merge hot loop.
+
+Reconfiguration is a *control-plane* operation: the ``reconfigure_*``
+functions run eagerly on host (numpy + eager jax), between jitted ticking
+segments — the steady-state loops in ``repro.engine.sharded`` are
+untouched, and physical shapes never change: ``n_rows`` (G_max) rows are
+allocated up front and epochs activate subsets, which is what keeps every
+jitted tick shape-stable across membership changes.
+
+State-transfer model (documented assumptions, asserted where cheap):
+
+  * only **admitted-but-unordered** slots move (nonzero observed protocol
+    state, no assigned instance — ``jaxsim.admitted_mask`` /
+    ``dissem.dissem_admitted_mask``). Ordered slots never move: removed
+    rows must be drained first (``ValueError`` otherwise); kept rows keep
+    their pipeline untouched.
+  * re-homing **swaps** the moving slot with an unadmitted (fresh) slot
+    of the destination row, so the global id multiset is preserved and
+    the recycling refill invariant (ids ever issued by row g equals
+    ``W + retired[g]``) survives — the displaced fresh id parks in the
+    source row as an ordinary never-admitted placeholder.
+  * ack/hold bitsets travel verbatim: disseminator partitions are modeled
+    rank-aligned and equal-width across groups, so bit k names the same
+    relative holder before and after the move. Phase-2b vote bits are
+    zeroed on both sides — votes are per-group promises and must be
+    re-earned from the new owner's sequencers (the slot is unordered, so
+    no quorum is lost).
+
+Import discipline: this module stays jax-free at import time (lazy
+imports inside functions, like ``router``) so the pure-python DES can use
+:class:`EpochTable` + :func:`route_id_epoch` without pulling in jax.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import router
+
+
+@dataclass(frozen=True)
+class EpochTable:
+    """epoch → active physical group rows.
+
+    ``active[e]`` is the strictly increasing tuple of row indices active
+    in epoch e; ``n_rows`` is the physical leading dimension G_max every
+    engine state is allocated with (defaults to ``max(row) + 1``). The
+    table is append-only in spirit: epoch e's assignment must never be
+    edited once ids were routed under it, because in-flight ids carry
+    their routing epoch until decided (drain-then-switch)."""
+    active: tuple[tuple[int, ...], ...]
+    n_rows: int | None = None
+
+    def __post_init__(self):
+        if not self.active:
+            raise ValueError("EpochTable needs at least one epoch")
+        acts = tuple(tuple(int(g) for g in a) for a in self.active)
+        for e, a in enumerate(acts):
+            if not a:
+                raise ValueError(f"epoch {e} has no active groups")
+            if list(a) != sorted(set(a)):
+                raise ValueError(
+                    f"epoch {e} active rows must be strictly increasing "
+                    f"(canonical form), got {a}")
+        rows_max = max(max(a) for a in acts)
+        n = self.n_rows if self.n_rows is not None else rows_max + 1
+        if rows_max >= n:
+            raise ValueError(
+                f"active row {rows_max} out of range for n_rows={n}")
+        object.__setattr__(self, "active", acts)
+        object.__setattr__(self, "n_rows", int(n))
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.active)
+
+    def groups(self, epoch: int) -> tuple[int, ...]:
+        return self.active[epoch]
+
+
+def route_id_epoch(bid, table: EpochTable, epoch: int) -> int:
+    """Python twin of :func:`route_ids_epoch` for the DES: stable owner
+    row of a python-level batch_id under the given epoch (crc32 hash over
+    the epoch's active-set size, mapped through the active tuple)."""
+    active = table.active[epoch]
+    return active[router.route_id(bid, len(active))]
+
+
+def route_ids_epoch(ids, table: EpochTable, epoch: int):
+    """uint32[N] → int32[N] owner *row* of each id under the given epoch:
+    ``router.route_ids`` over the epoch's active-set size, mapped through
+    the active tuple — so inactive rows are never targeted and the same
+    id re-routes deterministically when the active set changes."""
+    import jax.numpy as jnp
+    active = table.active[epoch]
+    if len(active) == 1:
+        return jnp.full(ids.shape, active[0], jnp.int32)
+    return jnp.asarray(np.asarray(active, np.int32))[
+        router.route_ids(ids, len(active))]
+
+
+def _route_rows_np(ids_np: np.ndarray, table: EpochTable,
+                   epoch: int) -> np.ndarray:
+    """Host-side owner rows (numpy twin, exact same placement)."""
+    active = np.asarray(table.active[epoch], np.int32)
+    return active[router.route_u32(ids_np, len(active))]
+
+
+# -- drain / marker ------------------------------------------------------------
+
+def is_drained(state, rows=None) -> bool:
+    """True iff every assigned ordering instance in ``rows`` (default:
+    all) is decided — the drain precondition for deactivating those rows.
+    ``state`` is a leading-G QuorumState."""
+    inst = np.asarray(state.instance)
+    dec = np.asarray(state.decided)
+    pending = (inst >= 0) & ~dec
+    if rows is not None:
+        pending = pending[np.asarray(list(rows), np.int32)]
+    return not bool(pending.any())
+
+
+def append_reconfig_marker(ms):
+    """Append the epoch-boundary marker at one aligned merge round.
+
+    Every group's log is padded with SKIP up to ``r = max(watermarks)``
+    and a RECONFIG token is written at round r for all groups, advancing
+    every watermark to ``r + 1`` — so the marker occupies one full
+    round-robin round and every learner flips epochs at the same merge
+    position. Both tokens are dropped from the merged output and never
+    block the commit gate, so ``merged_prefix`` / ``committed_prefix_len``
+    are monotone across the flip (the padding can only *unblock* real
+    entries that were waiting on a lagging group's watermark).
+
+    Host-side/eager (control plane). Returns ``(ms', marker_round)``.
+    Raises if the log cannot hold the marker round or already overflowed
+    (an overflowed log's cells no longer match its watermarks, so an
+    aligned marker round cannot be constructed)."""
+    from . import merge as merge_mod
+    import jax.numpy as jnp
+    logs = np.array(ms.logs)
+    wm = np.asarray(ms.watermarks).astype(np.int64)
+    if np.asarray(ms.overflowed).any():
+        raise ValueError(
+            "merge log overflowed before the epoch switch — its cells no "
+            "longer match the watermarks; re-init a larger log first")
+    G, L = logs.shape
+    r = int(wm.max())
+    if r + 1 > L:
+        raise ValueError(
+            f"merge log capacity {L} cannot hold the marker round {r} — "
+            "size the log for the whole run incl. one reconfig round")
+    for g in range(G):
+        logs[g, int(wm[g]):r] = merge_mod.SKIP
+        logs[g, r] = merge_mod.RECONFIG
+    new_wm = np.full((G,), r + 1, np.int32)
+    return merge_mod.MergeState(
+        logs=jnp.asarray(logs), watermarks=jnp.asarray(new_wm),
+        overflowed=ms.overflowed), r
+
+
+# -- state transfer ------------------------------------------------------------
+
+def _check_epochs(table: EpochTable, old_epoch: int, new_epoch: int) -> None:
+    for e in (old_epoch, new_epoch):
+        if not 0 <= e < table.n_epochs:
+            raise ValueError(f"epoch {e} not in table (n={table.n_epochs})")
+    if new_epoch == old_epoch:
+        raise ValueError("reconfiguration needs two distinct epochs")
+
+
+def _rehome(slot_ids: np.ndarray, admitted: np.ndarray, ordered: np.ndarray,
+            table: EpochTable, old_epoch: int, new_epoch: int,
+            removed, move_payloads: list, reset_payloads: list) -> list:
+    """Swap re-homed slots into unadmitted slots of their new owner rows
+    (in-place on the numpy arrays).
+
+    An admitted-but-unordered slot moves iff its *ownership changed*: the
+    new epoch's router names a different owner than the old epoch's did,
+    or its current row leaves the active set. Ids whose owner is
+    unchanged stay where the admission path put them — routing epochs pin
+    ownership, they don't retroactively enforce hash placement, which is
+    what makes an epoch flip to an identical assignment an exact no-op.
+    The destination is always the *new* epoch's owner row.
+
+    ``move_payloads`` are (array[G, W, ...], zero) pairs carried with the
+    slot; ``reset_payloads`` are zeroed on both sides. Returns the move
+    list [(id, src_row, dst_row, dst_slot), ...], deterministic (rows
+    ascending, slots ascending, destinations lowest-index-first)."""
+    G, W = slot_ids.shape
+    removed = set(removed)
+    movable = admitted & ~ordered
+    free = ~admitted & ~ordered
+    free_q = {g: deque(np.nonzero(free[g])[0].tolist()) for g in range(G)}
+    mg, mw = np.nonzero(movable)
+    if mg.size == 0:
+        return []
+    ids_m = slot_ids[mg, mw]
+    owner_old = _route_rows_np(ids_m, table, old_epoch)
+    owner_new = _route_rows_np(ids_m, table, new_epoch)
+    moves = []
+    for g, w, oo, on in zip(mg.tolist(), mw.tolist(),
+                            owner_old.tolist(), owner_new.tolist()):
+        if on == oo and g not in removed:
+            continue                      # ownership unchanged: stays put
+        tgt = on
+        if tgt == g:
+            continue                      # already lives at the new owner
+        if not free_q[tgt]:
+            raise ValueError(
+                f"group {tgt} has no unadmitted slot to receive re-homed "
+                f"id {int(slot_ids[g, w])} — drain or recycle the "
+                "destination rows before switching epochs")
+        tw = free_q[tgt].popleft()
+        moved_id = int(slot_ids[g, w])
+        slot_ids[g, w], slot_ids[tgt, tw] = slot_ids[tgt, tw], slot_ids[g, w]
+        for arr, zero in move_payloads:
+            arr[tgt, tw] = arr[g, w]
+            arr[g, w] = zero
+        for arr, zero in reset_payloads:
+            arr[tgt, tw] = zero
+            arr[g, w] = zero
+        # the swapped-in fresh id is unadmitted — reusable as a further
+        # destination in this same pass
+        free_q[g].append(w)
+        moves.append((moved_id, g, tgt, int(tw)))
+    return moves
+
+
+def _drain_check(q, removed) -> None:
+    if removed and not is_drained(q, removed):
+        raise ValueError(
+            f"groups {tuple(removed)} leave the active set but still have "
+            "ordered-but-undecided instances — drain them (tick with vote "
+            "traffic only) before switching epochs")
+
+
+def _removed_added(table: EpochTable, old_epoch: int, new_epoch: int):
+    old = set(table.active[old_epoch])
+    new = set(table.active[new_epoch])
+    return sorted(old - new), sorted(new - old)
+
+
+def reconfigure_plain(state, slot_ids, ms, table: EpochTable,
+                      old_epoch: int, new_epoch: int):
+    """Epoch switch for the plain (non-recycled) sharded engine.
+
+    Eager host-side control-plane call between jitted segments. Removed
+    rows must be drained; their decided slots stay in the window (the
+    plain commit gate reads live decided flags — there is no retired
+    base to seal into). Admitted-but-unordered slots are re-homed by
+    swap, so callers must use the *returned* slot_ids for all subsequent
+    traffic/tiles. Returns ``(state, slot_ids, ms, report)``.
+    """
+    import jax.numpy as jnp
+    _check_epochs(table, old_epoch, new_epoch)
+    removed, added = _removed_added(table, old_epoch, new_epoch)
+    _drain_check(state, removed)
+    ids = np.array(slot_ids)
+    ack = np.array(state.ack_bits)
+    vote = np.array(state.vote_bits)
+    stab = np.array(state.stable)
+    admitted = np.asarray(_admitted_np(state))
+    ordered = np.asarray(state.instance) >= 0
+    moves = _rehome(ids, admitted, ordered, table, old_epoch, new_epoch,
+                    removed,
+                    move_payloads=[(ack, 0), (stab, False)],
+                    reset_payloads=[(vote, 0)])
+    state = state._replace(ack_bits=jnp.asarray(ack),
+                           vote_bits=jnp.asarray(vote),
+                           stable=jnp.asarray(stab))
+    ms, marker_round = append_reconfig_marker(ms)
+    report = _report(new_epoch, table, removed, added, moves, marker_round)
+    return state, jnp.asarray(ids), ms, report
+
+
+def reconfigure_recycled(rs, ms, table: EpochTable, old_epoch: int,
+                         new_epoch: int, *, id_stride: int):
+    """Epoch switch for the recycled engine (``RecycleState``).
+
+    Removed rows are drained (checked), then every row is compacted in
+    one pass (``jaxsim.compact_and_refill_packed``, no watermark gate):
+    removed rows **seal** — their whole decided prefix retires, so
+    afterwards ``rs.retired[g] == next_instance[g]`` and the commit gate
+    recovers the row's entire ordered history from the base offset alone,
+    letting the row sit inactive forever without pinning window slots —
+    and kept rows retire their contiguous decided prefix too, freeing
+    unadmitted slots to receive re-homed ids (recycling at the epoch
+    boundary). An epoch flip with an *identical* active set skips all of
+    this and is an exact engine-state no-op. Then admitted-but-unordered
+    slots whose owner changed re-home by swap, preserving the refill
+    invariant (see module docstring). Returns ``(rs, ms, report)``;
+    report["sealed_retired"] maps each removed row to its post-seal base
+    offset.
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..core import jaxsim
+    from .sharded import RecycleState
+    _check_epochs(table, old_epoch, new_epoch)
+    removed, added = _removed_added(table, old_epoch, new_epoch)
+    _drain_check(rs.q, removed)
+    G = rs.slot_ids.shape[0]
+    if removed or added:
+        id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+        q, sids, retired, _ = jax.vmap(jaxsim.compact_and_refill_packed)(
+            rs.q, rs.slot_ids, rs.retired, id_base)
+        rs = RecycleState(q=q, slot_ids=sids, retired=retired)
+        _check_sealed(rs, removed)
+    ids = np.array(rs.slot_ids)
+    ack = np.array(rs.q.ack_bits)
+    vote = np.array(rs.q.vote_bits)
+    stab = np.array(rs.q.stable)
+    admitted = np.asarray(_admitted_np(rs.q))
+    ordered = np.asarray(rs.q.instance) >= 0
+    moves = _rehome(ids, admitted, ordered, table, old_epoch, new_epoch,
+                    removed,
+                    move_payloads=[(ack, 0), (stab, False)],
+                    reset_payloads=[(vote, 0)])
+    rs = RecycleState(
+        q=rs.q._replace(ack_bits=jnp.asarray(ack),
+                        vote_bits=jnp.asarray(vote),
+                        stable=jnp.asarray(stab)),
+        slot_ids=jnp.asarray(ids), retired=rs.retired)
+    ms, marker_round = append_reconfig_marker(ms)
+    report = _report(new_epoch, table, removed, added, moves, marker_round)
+    report["sealed_retired"] = {
+        g: int(np.asarray(rs.retired)[g]) for g in removed}
+    return rs, ms, report
+
+
+def reconfigure_gated_recycled(gs, ms, table: EpochTable, old_epoch: int,
+                               new_epoch: int, *, id_stride: int,
+                               fresh_stable: bool = False):
+    """Epoch switch for the gated recycled engine (``GatedRecycleState``).
+
+    Same protocol as :func:`reconfigure_recycled`, with the dissemination
+    window moved in lockstep: the boundary compaction moves both windows
+    through one shared :class:`jaxsim.CompactionPlan` per row (exactly
+    the ``gated_recycle_groups`` pattern), and a re-homed slot carries
+    its hold bitset and stability flag to the new owner — partial
+    replication progress and the stability gate never regress across the
+    flip. ``fresh_stable`` seeds freed slots, as in recycling. Returns
+    ``(gs, ms, report)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..core import jaxsim
+    from ..dissem.engine import DissemState, dissem_admitted_mask
+    from .sharded import GatedRecycleState, RecycleState
+    _check_epochs(table, old_epoch, new_epoch)
+    removed, added = _removed_added(table, old_epoch, new_epoch)
+    _drain_check(gs.rs.q, removed)
+    G = gs.rs.slot_ids.shape[0]
+    if removed or added:
+        id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+
+        def per_group(q, sids, retired, base, holds, dstab):
+            plan = jaxsim.compaction_plan(q, retired)
+            q, sids, retired, n_ret = jaxsim.compact_and_refill_packed(
+                q, sids, retired, base, plan=plan)
+            holds = jaxsim.apply_compaction(plan, holds, jnp.uint32(0))
+            dstab = jaxsim.apply_compaction(plan, dstab, fresh_stable)
+            return q, sids, retired, n_ret, holds, dstab
+
+        q, sids, retired, _, holds, dstab = jax.vmap(per_group)(
+            gs.rs.q, gs.rs.slot_ids, gs.rs.retired, id_base,
+            gs.d.hold_bits, gs.d.stable)
+        gs = GatedRecycleState(
+            rs=RecycleState(q=q, slot_ids=sids, retired=retired),
+            d=DissemState(hold_bits=holds, stable=dstab))
+        _check_sealed(gs.rs, removed)
+    ids = np.array(gs.rs.slot_ids)
+    ack = np.array(gs.rs.q.ack_bits)
+    vote = np.array(gs.rs.q.vote_bits)
+    stab = np.array(gs.rs.q.stable)
+    holds = np.array(gs.d.hold_bits)
+    dstab = np.array(gs.d.stable)
+    admitted = np.asarray(_admitted_np(gs.rs.q)) \
+        | np.asarray(dissem_admitted_mask(gs.d))
+    ordered = np.asarray(gs.rs.q.instance) >= 0
+    moves = _rehome(ids, admitted, ordered, table, old_epoch, new_epoch,
+                    removed,
+                    move_payloads=[(ack, 0), (stab, False),
+                                   (holds, 0), (dstab, False)],
+                    reset_payloads=[(vote, 0)])
+    gs = GatedRecycleState(
+        rs=RecycleState(
+            q=gs.rs.q._replace(ack_bits=jnp.asarray(ack),
+                               vote_bits=jnp.asarray(vote),
+                               stable=jnp.asarray(stab)),
+            slot_ids=jnp.asarray(ids), retired=gs.rs.retired),
+        d=DissemState(hold_bits=jnp.asarray(holds),
+                      stable=jnp.asarray(dstab)))
+    ms, marker_round = append_reconfig_marker(ms)
+    report = _report(new_epoch, table, removed, added, moves, marker_round)
+    report["sealed_retired"] = {
+        g: int(np.asarray(gs.rs.retired)[g]) for g in removed}
+    return gs, ms, report
+
+
+def _admitted_np(q):
+    from ..core.jaxsim import admitted_mask
+    return admitted_mask(q)
+
+
+def _check_sealed(rs, removed) -> None:
+    """Seal postcondition: a drained, compacted removed row holds no
+    ordered slots and its base offset covers every instance it ever
+    assigned — internal invariant, cannot fail after _drain_check."""
+    inst = np.asarray(rs.q.instance)
+    retired = np.asarray(rs.retired)
+    nxt = np.asarray(rs.q.next_instance)
+    for g in removed:
+        assert not (inst[g] >= 0).any(), \
+            f"seal left ordered slots in removed group {g}"
+        assert int(retired[g]) == int(nxt[g]), \
+            f"seal of group {g} retired {int(retired[g])} < {int(nxt[g])}"
+
+
+def _report(new_epoch, table, removed, added, moves, marker_round) -> dict:
+    return {
+        "epoch": int(new_epoch),
+        "active": table.active[new_epoch],
+        "removed": tuple(removed),
+        "added": tuple(added),
+        "moved": len(moves),
+        "moves": tuple(moves),
+        "marker_round": int(marker_round),
+    }

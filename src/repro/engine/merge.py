@@ -31,18 +31,30 @@ import numpy as np
 
 SKIP = -2   # explicit null instance: holds a round-robin slot, never emitted
 PAD = -1    # padding in fixed-shape outputs / unwritten log tail
+RECONFIG = -3  # epoch-boundary marker (repro.engine.epochs): holds one
+               # aligned round-robin slot in EVERY group's log at a
+               # membership switch, never emitted, never blocks commit —
+               # all learners cross the epoch at the same merge position
 
 
 class MergeState(NamedTuple):
-    """Per-group ordered logs plus append watermarks."""
+    """Per-group ordered logs plus append watermarks.
+
+    ``overflowed`` counts entries whose append landed past capacity L —
+    their log cells were never written even though the watermark advanced,
+    so the merged order silently diverges from the oracle beyond that
+    point. Any nonzero value means the log was undersized for the run and
+    the merged/committed counts are a plateau, not the true order."""
     logs: jax.Array        # int32[G, L] — entries; tail beyond watermark=PAD
     watermarks: jax.Array  # int32[G]    — appended entries per group
+    overflowed: jax.Array  # int32[G]    — entries dropped past capacity
 
 
 def init_merge(groups: int, capacity: int) -> MergeState:
     return MergeState(
         logs=jnp.full((groups, capacity), PAD, jnp.int32),
         watermarks=jnp.zeros((groups,), jnp.int32),
+        overflowed=jnp.zeros((groups,), jnp.int32),
     )
 
 
@@ -51,7 +63,10 @@ def append_entries(state: MergeState, entries: jax.Array,
     """Append ``entries[g, :counts[g]]`` to group g's log at its watermark.
 
     entries: int32[G, K]; counts: int32[G] (0 ≤ counts ≤ K). Pure lax —
-    overflow beyond capacity is silently dropped (size logs for the run).
+    entries past capacity cannot be stored (fixed shapes), but they are no
+    longer *silently* dropped: the per-group overflow count accumulates in
+    ``state.overflowed`` so callers (and the run_* debug asserts) can
+    detect an undersized log instead of consuming a corrupted order.
     """
     G, L = state.logs.shape
     K = entries.shape[1]
@@ -61,8 +76,13 @@ def append_entries(state: MergeState, entries: jax.Array,
     gathered = jnp.take_along_axis(
         entries, jnp.clip(rel, 0, K - 1), axis=1)
     logs = jnp.where(take, gathered, state.logs)
+    counts = counts.astype(jnp.int32)
+    # entries whose cell index wm+k lands at or past L (watermark may
+    # already exceed L from earlier overflow, hence the clip to [0, counts])
+    over = jnp.clip(state.watermarks + counts - jnp.int32(L), 0, counts)
     return MergeState(logs=logs,
-                      watermarks=state.watermarks + counts.astype(jnp.int32))
+                      watermarks=state.watermarks + counts,
+                      overflowed=state.overflowed + over)
 
 
 def mergeable_counts(watermarks: jax.Array) -> jax.Array:
@@ -84,9 +104,10 @@ def mergeable_counts(watermarks: jax.Array) -> jax.Array:
 def merged_prefix(state: MergeState) -> tuple[jax.Array, jax.Array]:
     """Maximal merged prefix: (out int32[G·L] padded with PAD, count).
 
-    Skip tokens are dropped (and do not count); order is round-robin
-    position order. Idempotent and monotone in the watermarks — appending
-    more entries only extends the previously returned prefix.
+    Control tokens (SKIP, RECONFIG) are dropped (and do not count); order
+    is round-robin position order. Idempotent and monotone in the
+    watermarks — appending more entries only extends the previously
+    returned prefix.
     """
     G, L = state.logs.shape
     counts = mergeable_counts(state.watermarks)                  # [G]
@@ -94,7 +115,7 @@ def merged_prefix(state: MergeState) -> tuple[jax.Array, jax.Array]:
     i_of = jnp.arange(G * L, dtype=jnp.int32) // G
     g_of = jnp.arange(G * L, dtype=jnp.int32) % G
     emit = i_of < counts[g_of]
-    keep = emit & (flat != SKIP)
+    keep = emit & (flat >= 0)                   # real ids only, no tokens
     out_idx = jnp.cumsum(keep.astype(jnp.int32)) - 1
     out = jnp.full((G * L,), PAD, jnp.int32)
     out = out.at[jnp.where(keep, out_idx, G * L)].set(flat, mode="drop")
@@ -103,20 +124,25 @@ def merged_prefix(state: MergeState) -> tuple[jax.Array, jax.Array]:
 
 def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
                           max_entries: int)\
-        -> tuple[jax.Array, jax.Array]:
+        -> tuple[jax.Array, jax.Array, jax.Array]:
     """Turn one sharded tick's ``assigned`` output into merge entries.
 
     assigned: int32[G, W] (per-slot instance assigned this tick, -1 = none);
     slot_ids: int32[G, W] global id of each slot. Returns
-    (entries int32[G, max_entries], counts int32[G]) where each group's
-    entries are its newly ordered ids in instance order, padded to the
-    *per-tick maximum* with SKIP — the explicit null instances that keep
-    round-robin positions aligned so an idle group never stalls the merge.
+    (entries int32[G, max_entries], counts int32[G], dropped int32 scalar)
+    where each group's entries are its newly ordered ids in instance
+    order, padded to the *per-tick maximum* with SKIP — the explicit null
+    instances that keep round-robin positions aligned so an idle group
+    never stalls the merge.
 
     ``max_entries`` must be ≥ the per-tick assignment count (the engine's
     order budget guarantees this); counts are clamped to ``max_entries``
-    so an undersized buffer truncates (drops ids) rather than duplicating
-    the last kept entry into phantom log positions.
+    so an undersized buffer truncates rather than duplicating the last
+    kept entry into phantom log positions. Truncation *loses ordered ids*
+    — they were assigned instances but never reach the merge log, so the
+    commit gate's instance ranks desynchronize from that point on.
+    ``dropped`` is the total count of such lost ids this tick; the run_*
+    loops accumulate it and debug-assert it stays zero.
 
     Recycling note: ``slot_ids`` is a *mutable mapping* under window
     recycling — the sharded engine passes its current per-tick slot→id map
@@ -134,7 +160,9 @@ def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
             ids, mode="drop"))(entries, pos, mask, slot_ids.astype(jnp.int32))
     counts = jnp.broadcast_to(
         jnp.minimum(jnp.max(n_assigned), max_entries), n_assigned.shape)
-    return entries, counts
+    dropped = jnp.sum(jnp.maximum(n_assigned - max_entries, 0),
+                      dtype=jnp.int32)
+    return entries, counts, dropped
 
 
 def committed_prefix_len(state: MergeState,
@@ -166,19 +194,21 @@ def committed_prefix_len(state: MergeState,
             jnp.arange(C, dtype=jnp.int32)[None, :] < retired_base[:, None])
     in_log = jnp.arange(L, dtype=jnp.int32)[None, :] < \
         state.watermarks[:, None]
-    nonskip = (state.logs != SKIP) & in_log
+    # real-id cells only: SKIP and RECONFIG hold positions but carry no
+    # instance, commit nothing, and never block
+    nonskip = (state.logs >= 0) & in_log
     rank = jnp.cumsum(nonskip.astype(jnp.int32), axis=1) - 1   # instance idx
     ent_dec = jnp.where(
         nonskip,
         jnp.take_along_axis(decided_by_instance,
                             jnp.clip(rank, 0, C - 1), axis=1),
-        True)                                                  # skips: free
+        True)                                                  # tokens: free
     counts = mergeable_counts(state.watermarks)
     i_of = jnp.arange(G * L, dtype=jnp.int32) // G
     g_of = jnp.arange(G * L, dtype=jnp.int32) % G
     emit = i_of < counts[g_of]
     flat = state.logs.T.reshape(-1)
-    keep = emit & (flat != SKIP)
+    keep = emit & (flat >= 0)
     dec = ent_dec.T.reshape(-1)
     # barrier: all-committed so far, in round-robin position order
     barrier = jnp.cumprod(jnp.where(emit, dec, True).astype(jnp.int32))
@@ -189,7 +219,7 @@ def committed_prefix_len(state: MergeState,
 
 def oracle_merge(group_logs: list[list[int]]) -> list[int]:
     """Reference merge: strict round-robin over rounds, stop at the first
-    missing entry, drop SKIP tokens."""
+    missing entry, drop control tokens (SKIP, RECONFIG)."""
     out: list[int] = []
     r = 0
     while True:
@@ -197,7 +227,7 @@ def oracle_merge(group_logs: list[list[int]]) -> list[int]:
             if r >= len(group_logs[g]):
                 return out
             e = group_logs[g][r]
-            if e != SKIP:
+            if e >= 0:
                 out.append(int(e))
         r += 1
 

@@ -13,12 +13,28 @@ The two are *different* hash functions (crc32-of-repr vs multiplicative);
 each is deterministic and stable on its own side, but an id routed through
 both will generally land in different groups — when cross-validating the
 DES against the engine, route both sides with ``route_id``.
+
+Hash versioning: the multiplicative hash is versioned by
+``ROUTER_HASH_VERSION`` because the placement function is part of the
+on-the-wire contract (every node must route identically, and an epoch
+remap re-hashes live ids — see ``repro.engine.epochs``). Version 1 kept
+only the top 16 bits of the 32-bit product before the modulus, which is
+biased for structured id patterns and *degenerate* for group counts
+beyond 2^16 (rows ≥ 65536 can never be reached). Version 2 (default)
+folds the full product (xor of high/low halves) before the modulus.
+Pass ``version=1`` to reproduce legacy fixtures bit-for-bit.
 """
 from __future__ import annotations
 
 import zlib
 
+import numpy as np
+
 _KNUTH = 2654435761  # 2^32 / golden ratio
+
+# Placement-function version (see module docstring). Bump only with a
+# migration story: changing it re-homes every id in a live cluster.
+ROUTER_HASH_VERSION = 2
 
 
 def route_id(bid, groups: int) -> int:
@@ -28,14 +44,33 @@ def route_id(bid, groups: int) -> int:
     return zlib.crc32(repr(bid).encode()) % groups
 
 
-def route_ids(ids, groups: int):
+def route_ids(ids, groups: int, *, version: int = ROUTER_HASH_VERSION):
     """uint32[N] → int32[N] group of each id (vectorized, jit-safe).
 
     jnp is imported lazily so the pure-python DES path (which only needs
     ``route_id``) never pulls in jax."""
     import jax.numpy as jnp
-    h = (ids.astype(jnp.uint32) * jnp.uint32(_KNUTH)) >> jnp.uint32(16)
+    h = ids.astype(jnp.uint32) * jnp.uint32(_KNUTH)
+    if version == 1:
+        h = h >> jnp.uint32(16)          # legacy: top 16 bits only (biased)
+    else:
+        h = h ^ (h >> jnp.uint32(16))    # fold the full 32-bit product
     return (h % jnp.uint32(groups)).astype(jnp.int32)
+
+
+def route_u32(ids, groups: int, *, version: int = ROUTER_HASH_VERSION)\
+        -> np.ndarray:
+    """Numpy twin of :func:`route_ids` — identical placement, no jax.
+
+    Host-side control-plane code (``repro.engine.epochs`` re-homing live
+    ids at an epoch switch) routes with this; a property test pins it
+    elementwise-equal to the jax path."""
+    h = np.asarray(ids, dtype=np.uint32) * np.uint32(_KNUTH)
+    if version == 1:
+        h = h >> np.uint32(16)
+    else:
+        h = h ^ (h >> np.uint32(16))
+    return (h % np.uint32(groups)).astype(np.int32)
 
 
 def partition_ids(bids, groups: int) -> list[list]:

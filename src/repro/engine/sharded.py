@@ -126,6 +126,20 @@ def _resolve_max_entries(max_entries: int | None,
     return max_entries
 
 
+def _assert_no_dropped(dropped) -> None:
+    """jax.debug.callback target: the run_* scans accumulate the per-tick
+    over-assignment drop count from ``entries_from_assigned``. It is zero
+    whenever ``max_entries ≥ order_budget`` (``_resolve_max_entries``
+    enforces that statically), so this firing means an engine invariant
+    broke — ordered ids never reached the merge log."""
+    if int(dropped) != 0:
+        raise AssertionError(
+            f"{int(dropped)} ordered ids were truncated out of the merge "
+            "entries (over-assignment past max_entries) — the merged order "
+            "is missing ids and the commit gate's instance ranks are "
+            "desynchronized")
+
+
 @functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
                                              "order_budget", "max_entries"))
 def run_sharded_ticks_merged(state: QuorumState, merge_state,
@@ -156,16 +170,18 @@ def run_sharded_ticks_merged(state: QuorumState, merge_state,
     vtick = jax.vmap(body_fn)
 
     def body(carry, tv):
-        st, ms = carry
+        st, ms, dropped = carry
         a, v = tv
         st, out = vtick(st, a, v)
-        entries, counts = merge_mod.entries_from_assigned(
+        entries, counts, d_t = merge_mod.entries_from_assigned(
             out["assigned"], slot_ids, max_entries)
         ms = merge_mod.append_entries(ms, entries, counts)
-        return (st, ms), ()
+        return (st, ms, dropped + d_t), ()
 
-    (state, merge_state), _ = jax.lax.scan(
-        body, (state, merge_state), (packed_acks_seq, packed_votes_seq))
+    (state, merge_state, dropped), _ = jax.lax.scan(
+        body, (state, merge_state, jnp.int32(0)),
+        (packed_acks_seq, packed_votes_seq))
+    jax.debug.callback(_assert_no_dropped, dropped)
     merged, count = merge_mod.merged_prefix(merge_state)
     # commit gate: instance k of group g is consumable once its slot's 2b
     # quorum is in — scatter per-slot decided flags into instance order
@@ -292,12 +308,12 @@ def _recycled_body(rs: RecycleState, merge_state, packed_acks, packed_votes,
         jaxsim.engine_tick_packed, diss_majority=diss_majority,
         seq_majority=seq_majority, order_budget=order_budget))
     q, out = vtick(rs.q, packed_acks, packed_votes)
-    entries, counts = merge_mod.entries_from_assigned(
+    entries, counts, dropped = merge_mod.entries_from_assigned(
         out["assigned"], rs.slot_ids, max_entries)
     merge_state = merge_mod.append_entries(merge_state, entries, counts)
     rs = RecycleState(q=q, slot_ids=rs.slot_ids, retired=rs.retired)
     rs, n_ret = recycle_groups(rs, watermark=watermark, id_stride=id_stride)
-    out = dict(out, n_retired=n_ret)
+    out = dict(out, n_retired=n_ret, dropped=dropped)
     return rs, merge_state, out
 
 
@@ -353,11 +369,13 @@ def run_recycled_ticks_merged(rs: RecycleState, merge_state,
 
     Capacity bound: recycling unbounds the *window*, not the merge log —
     ``merge_state`` must be sized for the whole run (per-group capacity ≥
-    total appended entries, ≤ ticks × max_entries). ``append_entries``
-    silently drops writes past capacity while watermarks keep advancing,
-    so an undersized log plateaus the merged/committed counts; long-lived
-    services should checkpoint and re-init the log between segments (log
-    compaction is the merge-side sibling of window recycling).
+    total appended entries, ≤ ticks × max_entries). Writes past capacity
+    cannot be stored while watermarks keep advancing, so an undersized
+    log plateaus the merged/committed counts — ``merge_state.overflowed``
+    counts exactly those lost entries per group (check it between
+    segments); long-lived services should checkpoint and re-init the log
+    between segments (log compaction is the merge-side sibling of window
+    recycling).
     """
     max_entries = _resolve_max_entries(max_entries, order_budget)
     body_kw = dict(diss_majority=diss_majority, seq_majority=seq_majority,
@@ -365,13 +383,15 @@ def run_recycled_ticks_merged(rs: RecycleState, merge_state,
                    watermark=watermark, id_stride=id_stride)
 
     def body(carry, tv):
-        rs, ms = carry
+        rs, ms, dropped = carry
         a, v = tv
-        rs, ms, _ = _recycled_body(rs, ms, a, v, **body_kw)
-        return (rs, ms), ()
+        rs, ms, out = _recycled_body(rs, ms, a, v, **body_kw)
+        return (rs, ms, dropped + out["dropped"]), ()
 
-    (rs, merge_state), _ = jax.lax.scan(
-        body, (rs, merge_state), (packed_acks_seq, packed_votes_seq))
+    (rs, merge_state, dropped), _ = jax.lax.scan(
+        body, (rs, merge_state, jnp.int32(0)),
+        (packed_acks_seq, packed_votes_seq))
+    jax.debug.callback(_assert_no_dropped, dropped)
     merged, count, committed = recycled_committed_prefix(rs, merge_state)
     return rs, merge_state, merged, count, committed
 
@@ -444,18 +464,19 @@ def run_gated_ticks_merged(state: QuorumState, d: DissemState, merge_state,
         seq_majority=seq_majority, order_budget=order_budget))
 
     def body(carry, tv):
-        st, d, ms = carry
+        st, d, ms, dropped = carry
         a, h, v = tv
         d, _ = absorb_holds_packed(d, h, stab_majority)
         st, out = vtick(st, a, _gated_votes(d, v))
-        entries, counts = merge_mod.entries_from_assigned(
+        entries, counts, d_t = merge_mod.entries_from_assigned(
             out["assigned"], slot_ids, max_entries)
         ms = merge_mod.append_entries(ms, entries, counts)
-        return (st, d, ms), ()
+        return (st, d, ms, dropped + d_t), ()
 
-    (state, d, merge_state), _ = jax.lax.scan(
-        body, (state, d, merge_state),
+    (state, d, merge_state, dropped), _ = jax.lax.scan(
+        body, (state, d, merge_state, jnp.int32(0)),
         (packed_acks_seq, packed_holds_seq, packed_votes_seq))
+    jax.debug.callback(_assert_no_dropped, dropped)
     merged, count = merge_mod.merged_prefix(merge_state)
     dec_by_inst = _decided_by_instance(state.instance, state.decided,
                                        merge_state.logs.shape[1])
@@ -545,7 +566,7 @@ def _gated_recycled_body(gs: GatedRecycleState, merge_state, packed_acks,
         jaxsim.engine_tick_packed, diss_majority=diss_majority,
         seq_majority=seq_majority, order_budget=order_budget))
     q, out = vtick(gs.rs.q, packed_acks, _gated_votes(d, packed_votes))
-    entries, counts = merge_mod.entries_from_assigned(
+    entries, counts, dropped = merge_mod.entries_from_assigned(
         out["assigned"], gs.rs.slot_ids, max_entries)
     merge_state = merge_mod.append_entries(merge_state, entries, counts)
     gs = GatedRecycleState(
@@ -554,7 +575,8 @@ def _gated_recycled_body(gs: GatedRecycleState, merge_state, packed_acks,
     gs, n_ret = gated_recycle_groups(gs, watermark=watermark,
                                      id_stride=id_stride,
                                      fresh_stable=fresh_stable)
-    out = dict(out, n_retired=n_ret, newly_stable=dout["newly_stable"])
+    out = dict(out, n_retired=n_ret, newly_stable=dout["newly_stable"],
+               dropped=dropped)
     return gs, merge_state, out
 
 
@@ -609,13 +631,14 @@ def run_gated_recycled_ticks_merged(gs: GatedRecycleState, merge_state,
                    id_stride=id_stride, fresh_stable=fresh_stable)
 
     def body(carry, tv):
-        gs, ms = carry
+        gs, ms, dropped = carry
         a, h, v = tv
-        gs, ms, _ = _gated_recycled_body(gs, ms, a, h, v, **body_kw)
-        return (gs, ms), ()
+        gs, ms, out = _gated_recycled_body(gs, ms, a, h, v, **body_kw)
+        return (gs, ms, dropped + out["dropped"]), ()
 
-    (gs, merge_state), _ = jax.lax.scan(
-        body, (gs, merge_state),
+    (gs, merge_state, dropped), _ = jax.lax.scan(
+        body, (gs, merge_state, jnp.int32(0)),
         (packed_acks_seq, packed_holds_seq, packed_votes_seq))
+    jax.debug.callback(_assert_no_dropped, dropped)
     merged, count, committed = recycled_committed_prefix(gs.rs, merge_state)
     return gs, merge_state, merged, count, committed

@@ -16,10 +16,18 @@ the same split for the training fleet:
 view: how many pods participate in the "pod" axis and the FSDP resharding
 plan (which checkpoint shards each new pod must fetch) — the glue between
 the ordered log and `launch.mesh`.
+
+``OrderingGroupLog`` is the ordering-layer analogue: SCALE commands over
+*group rows* instead of pods. Its applied sequence compiles directly to a
+``repro.engine.epochs.EpochTable`` (and an ``HTConfig.reconfig_schedule``
+for the DES), so the control plane that reshards pods is the same one
+that drains-then-switches ordering groups. Import stays jax-free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+from ..engine.epochs import EpochTable
 
 
 @dataclass(frozen=True)
@@ -61,3 +69,57 @@ class MembershipLog:
             if v.step_boundary <= step:
                 out = v
         return out
+
+
+class OrderingGroupLog:
+    """Ordered SCALE commands over ordering-group *rows* — the ordering
+    layer's membership log. Each applied command appends one epoch; the
+    whole history compiles to the :class:`repro.engine.epochs.EpochTable`
+    shared by the vectorized engine (``reconfigure_*``) and the DES
+    (``HTConfig.reconfig_schedule``). ``n_rows`` is the physical group
+    count: rows are only ever (de)activated, never created mid-run, which
+    is what lets the engine keep fixed array shapes across epochs."""
+
+    def __init__(self, initial_active, *, n_rows: int | None = None) -> None:
+        self.n_rows = n_rows
+        self._epochs: list[tuple[int, ...]] = []
+        self._boundaries: list[float] = [0.0]
+        self._append(initial_active)
+
+    def _append(self, active) -> None:
+        rows = tuple(sorted(set(int(r) for r in active)))
+        self._epochs.append(rows)
+        # validate incrementally — EpochTable rejects empty/overflowing rows
+        EpochTable(tuple(self._epochs), n_rows=self.n_rows)
+
+    def apply_scale(self, active, at: float) -> int:
+        """Append an epoch activating exactly ``active`` rows at time/step
+        boundary ``at`` (must be non-decreasing). Returns the new epoch
+        index."""
+        if at < self._boundaries[-1]:
+            raise ValueError(
+                f"scale boundary {at} precedes {self._boundaries[-1]}")
+        self._append(active)
+        self._boundaries.append(float(at))
+        return len(self._epochs) - 1
+
+    @property
+    def current_epoch(self) -> int:
+        return len(self._epochs) - 1
+
+    def table(self) -> EpochTable:
+        """The compiled epoch table (engine-side source of truth)."""
+        return EpochTable(tuple(self._epochs), n_rows=self.n_rows)
+
+    def reconfig_schedule(self) -> tuple:
+        """The DES twin: ``HTConfig.reconfig_schedule`` value — one
+        (time, active_rows) pair per post-initial epoch."""
+        return tuple(zip(self._boundaries[1:], self._epochs[1:]))
+
+    def epoch_at(self, t: float) -> int:
+        """Routing epoch in force at time/step ``t``."""
+        e = 0
+        for k, b in enumerate(self._boundaries):
+            if b <= t:
+                e = k
+        return e

@@ -188,6 +188,65 @@ def test_accumulator_equals_plan_batches(sizes, budget, maxreq):
     assert acc.pending_bytes == 0
 
 
+@given(sizes=st.lists(st.integers(min_value=0, max_value=400),
+                      min_size=0, max_size=40),
+       budget=st.integers(min_value=EMPTY_BATCH_BYTES + 1, max_value=600),
+       maxreq=st.sampled_from([None, 1, 3, 7]))
+@settings(max_examples=40, deadline=None)
+def test_accumulator_byte_accounting_invariant(sizes, budget, maxreq):
+    """Accounting invariant, held at EVERY point of the stream (not just
+    after the final flush): ``bytes_flushed + pending_bytes`` equals the
+    total wire bytes of the equivalent one-shot plan over the requests
+    seen so far. Greedy batching is prefix-stable, so the streaming and
+    planned totals can never diverge mid-stream — this is what lets the
+    bandwidth closed forms consume either implementation's numbers."""
+    acc = BatchAccumulator(budget_bytes=budget, max_requests=maxreq)
+
+    def planned_total(k):
+        if k == 0:
+            return 0
+        a = plan_batches(sizes[:k], budget_bytes=budget,
+                         max_requests=maxreq)
+        return int(batch_wire_sizes(sizes[:k], a).sum())
+
+    assert acc.bytes_flushed + acc.pending_bytes == 0
+    for k, s in enumerate(sizes, start=1):
+        acc.add(s)
+        assert acc.bytes_flushed + acc.pending_bytes == planned_total(k)
+    acc.flush()
+    assert acc.pending_bytes == 0
+    assert acc.bytes_flushed == planned_total(len(sizes))
+
+
+def test_accumulator_accounting_oversized_and_maxreq_edges():
+    """The invariant at the two flush-trigger edges: a single oversized
+    request (cost > budget) gets its own over-budget batch and is counted
+    at its true wire size; max_requests=1 closes a batch per request, so
+    every pending batch is exactly header + one request."""
+    budget = EMPTY_BATCH_BYTES + 50
+    acc = BatchAccumulator(budget_bytes=budget)
+    acc.add(500)                                   # oversized, atomic
+    assert acc.pending_bytes == EMPTY_BATCH_BYTES + 4 + 500
+    assert acc.pending_bytes > budget              # over budget by design
+    acc.add(10)                                    # closes the oversized batch
+    assert acc.bytes_flushed == EMPTY_BATCH_BYTES + 4 + 500
+    assert acc.pending_bytes == EMPTY_BATCH_BYTES + 4 + 10
+    sizes = [500, 10]
+    a = plan_batches(sizes, budget_bytes=budget)
+    assert acc.bytes_flushed + acc.pending_bytes == \
+        batch_wire_sizes(sizes, a).sum()
+
+    acc1 = BatchAccumulator(budget_bytes=10_000, max_requests=1)
+    for k, s in enumerate([10, 20, 30], start=1):
+        acc1.add(s)
+        assert acc1.pending_bytes == EMPTY_BATCH_BYTES + 4 + s
+        assert acc1.n_flushed == k - 1
+    acc1.flush()
+    a1 = plan_batches([10, 20, 30], budget_bytes=10_000, max_requests=1)
+    assert int(a1.max()) + 1 == acc1.n_flushed == 3
+    assert acc1.bytes_flushed == batch_wire_sizes([10, 20, 30], a1).sum()
+
+
 class TestBandwidth:
     def test_partition_size(self):
         assert partition_size(12, 4) == 3

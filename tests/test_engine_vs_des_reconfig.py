@@ -1,0 +1,153 @@
+"""Engine ↔ DES cross-validation across a mid-run membership change.
+
+Extends tests/test_engine_vs_des.py to dynamic membership: run HTPaxosSim
+with a ``reconfig_schedule`` (epoch flip while traffic is in flight),
+extract the per-physical-group decided streams, replay them through the
+jax engine, and assert every DES learner executed exactly the engine's
+merged order. Control instances — ``__noop__`` skips *and* the
+``__reconfig_<e>__`` markers — become merge SKIP padding on the engine
+side, the same way the engine's own reconfigure_* path turns the epoch
+boundary into one dropped RECONFIG round.
+
+Also pins the drain-then-switch routing contract: every decided bid's
+owning group equals ``route_id_epoch`` under the bid's *pinned* epoch
+(recorded at batch origin), no id is ordered by two groups
+(``check_unique_ownership``), and every group's log carries the epoch
+marker."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.classic import OrderingConfig
+from repro.core.htpaxos import (HTConfig, HTPaxosSim, is_control_bid,
+                                reconfig_bid)
+from repro.core.invariants import (check_legal_interleaving,
+                                   check_unique_ownership)
+from repro.engine import merge as M
+from repro.engine import sharded as S
+from repro.engine.epochs import route_id_epoch
+
+
+def run_des(G_max, initial_active, schedule, seed=0):
+    cfg = HTConfig(n_diss=5, n_seq=3, n_learners=1, n_clients=6,
+                   batch_size=2, seed=seed, n_groups=G_max,
+                   initial_active=initial_active,
+                   reconfig_schedule=schedule,
+                   ordering=OrderingConfig(order_batch_max=1))
+    sim = HTPaxosSim(cfg, requests_per_client=20, client_gap=10.0)
+    sim.run(until=6_000)
+    return sim
+
+
+def group_instance_streams(sim):
+    """Per-physical-group decided value streams in instance order, one bid
+    (real or control) per instance, asserted gap-free."""
+    streams = []
+    for grp in sim.seq_groups:
+        log: dict = {}
+        for s in grp:
+            log.update(sim.agents[s].stable["decided_log"])
+        assert set(log) == set(range(len(log))), "gap in decided log"
+        vals = [log[i] for i in range(len(log))]
+        assert all(len(v) == 1 for v in vals)    # order_batch_max=1 held
+        streams.append([v[0] for v in vals])
+    return streams
+
+
+def replay_through_engine(streams, G):
+    """Drive repro.engine with saturated per-instance ack tiles derived
+    from the DES streams (control instances → unacked skip rounds);
+    return the consumable merged bid order."""
+    T = max((len(s) for s in streams), default=0)
+    real = [[b for b in s if not is_control_bid(b)] for s in streams]
+    W = max(max((len(r) for r in real), default=1), 1)
+    bid_table = [b for r in real for b in r]
+    bid_to_int = {b: i for i, b in enumerate(bid_table)}
+    slot_ids = np.full((G, W), len(bid_table), np.int32)
+    for g, r in enumerate(real):
+        for k, b in enumerate(r):
+            slot_ids[g, k] = bid_to_int[b]
+    acks = np.zeros((T, G, W, 1), np.uint32)
+    for g, s in enumerate(streams):
+        k = 0
+        for t, b in enumerate(s):
+            if not is_control_bid(b):
+                acks[t, g, k, 0] = 0xFFFFFFFF
+                k += 1
+    votes = np.full((T, G, W, 1), 0xFFFFFFFF, np.uint32)
+    st = S.init_sharded(G, W, 5, 3)
+    ms = M.init_merge(G, max(T, 1))
+    st, ms, merged, cnt, committed = S.run_sharded_ticks_merged(
+        st, ms, jnp.asarray(acks), jnp.asarray(votes),
+        jnp.asarray(slot_ids), diss_majority=3, seq_majority=2,
+        order_budget=1)
+    assert int(committed) == int(cnt) == len(bid_table)
+    return [bid_table[i] for i in np.asarray(merged)[:int(committed)]]
+
+
+def _check_reconfig_run(sim, n_requests):
+    assert sim.total_replied() == n_requests
+    streams = group_instance_streams(sim)
+    # the marker was decided by every physical group exactly once
+    for g, s in enumerate(streams):
+        assert s.count(reconfig_bid(1)) == 1, f"group {g} missing marker"
+    # pinned-epoch routing: each real bid's owner group is route_id_epoch
+    # under the epoch recorded at its batch origin
+    bid_epoch: dict = {}
+    for d in sim.disseminators:
+        bid_epoch.update(d.stable["bid_epoch"])
+    pinned_epochs = set()
+    for g, s in enumerate(streams):
+        for b in s:
+            if is_control_bid(b):
+                continue
+            e = bid_epoch[b]
+            pinned_epochs.add(e)
+            assert route_id_epoch(b, sim.epoch_table, e) == g, (b, g, e)
+    assert pinned_epochs == {0, 1}, "flip did not land mid-traffic"
+    # safety: no id ordered twice or by two groups
+    orders = sim.group_decided_orders()
+    assert check_unique_ownership(orders) == []
+    # engine replay reproduces every learner's executed order exactly
+    engine_order = replay_through_engine(streams, sim.cfg.n_groups)
+    learners = sim.all_learner_agents()
+    assert learners
+    for a in learners:
+        assert a.executed_bid_order == engine_order, a.node_id
+        assert check_legal_interleaving(a.executed_bid_order, orders) == []
+    assert sorted(engine_order) == sorted(
+        b for s in streams for b in s if not is_control_bid(b))
+
+
+def test_des_reconfig_grow_matches_engine():
+    """G=2→3 mid-run: new row starts taking new-epoch traffic while
+    old-epoch bids drain; engine replay and every learner agree."""
+    sim = run_des(3, (0, 1), ((100.0, (0, 1, 2)),))
+    _check_reconfig_run(sim, 6 * 20)
+    # the added row only ever ordered post-flip (epoch-1) bids
+    bid_epoch: dict = {}
+    for d in sim.disseminators:
+        bid_epoch.update(d.stable["bid_epoch"])
+    for b in sim.group_decided_orders()[2]:
+        assert bid_epoch[b] == 1
+
+
+def test_des_reconfig_shrink_matches_engine():
+    """G=4→2 mid-run: retired rows drain their pinned old-epoch bids and
+    then go quiet; engine replay and every learner agree."""
+    sim = run_des(4, (0, 1, 2, 3), ((100.0, (0, 1)),))
+    _check_reconfig_run(sim, 6 * 20)
+    bid_epoch: dict = {}
+    for d in sim.disseminators:
+        bid_epoch.update(d.stable["bid_epoch"])
+    for g in (2, 3):                   # rows leaving: only epoch-0 bids
+        for b in sim.group_decided_orders()[g]:
+            assert bid_epoch[b] == 0
+
+
+def test_des_reconfig_across_seeds():
+    """Same identity under a different traffic interleaving."""
+    sim = run_des(3, (0, 1), ((120.0, (0, 1, 2)),), seed=3)
+    _check_reconfig_run(sim, 6 * 20)

@@ -1,0 +1,360 @@
+"""Epoch-based dynamic group membership (repro.engine.epochs).
+
+Covers the drain-then-switch protocol end to end on the engine side:
+EpochTable validation, epoch routing (jax + numpy twins), the aligned
+RECONFIG marker round, and live reconfigurations of the plain / recycled /
+gated-recycled engines — grow, shrink (removed rows sealed), the no-op
+flip (identical active set must be an exact engine-state identity), and
+the not-drained refusal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import epochs as E
+from repro.engine import merge as M
+from repro.engine import router
+from repro.engine import sharded as S
+
+D, SQ = 5, 3            # disseminators / sequencers per group
+DM, SM = 3, 2           # majorities
+BUDGET = 4              # order budget per tick
+STRIDE = 1 << 10        # recycled id range per group row
+FULL = np.uint32(0xFFFFFFFF)
+
+
+def _tiles(G, W, ack_slots=(), partial_slots=()):
+    """One tick of traffic: saturated acks on ``ack_slots``, a single
+    1-disseminator ack bit on ``partial_slots`` (admitted but never
+    majority-stable), saturated votes everywhere (the standard idiom —
+    votes on unordered slots carry no protocol information)."""
+    acks = np.zeros((G, W, 1), np.uint32)
+    for g, w in ack_slots:
+        acks[g, w] = FULL
+    for g, w in partial_slots:
+        acks[g, w] = 1
+    votes = np.full((G, W, 1), FULL, np.uint32)
+    return jnp.asarray(acks), jnp.asarray(votes)
+
+
+def _run_recycled(rs, ms, acks, votes, T):
+    return S.run_recycled_ticks_merged(
+        rs, ms, jnp.broadcast_to(acks, (T, *acks.shape)),
+        jnp.broadcast_to(votes, (T, *votes.shape)),
+        diss_majority=DM, seq_majority=SM, order_budget=BUDGET,
+        watermark=1, id_stride=STRIDE)
+
+
+def _run_plain(st, ms, sids, acks, votes, T):
+    return S.run_sharded_ticks_merged(
+        st, ms, jnp.broadcast_to(acks, (T, *acks.shape)),
+        jnp.broadcast_to(votes, (T, *votes.shape)), sids,
+        diss_majority=DM, seq_majority=SM, order_budget=BUDGET)
+
+
+def _trees_equal(a, b) -> bool:
+    return all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# -- EpochTable / routing ------------------------------------------------------
+
+def test_epoch_table_validation():
+    t = E.EpochTable(((0, 1), (0, 1, 2)))
+    assert t.n_epochs == 2 and t.n_rows == 3
+    assert t.groups(0) == (0, 1)
+    with pytest.raises(ValueError):
+        E.EpochTable(())
+    with pytest.raises(ValueError):
+        E.EpochTable(((0, 1), ()))
+    with pytest.raises(ValueError):
+        E.EpochTable(((1, 0),))            # not strictly increasing
+    with pytest.raises(ValueError):
+        E.EpochTable(((0, 0),))            # duplicate row
+    with pytest.raises(ValueError):
+        E.EpochTable(((0, 3),), n_rows=3)  # row out of range
+
+
+def test_route_ids_epoch_targets_only_active_rows():
+    table = E.EpochTable(((0, 2), (0, 1, 2, 3), (1,)), n_rows=4)
+    ids = jnp.arange(512, dtype=jnp.uint32)
+    for e in range(table.n_epochs):
+        rows = np.asarray(E.route_ids_epoch(ids, table, e))
+        assert set(rows.tolist()) <= set(table.active[e])
+        # numpy twin places every id identically
+        np.testing.assert_array_equal(
+            rows, E._route_rows_np(np.arange(512, dtype=np.uint32), table, e))
+    # single-active epoch: constant fast path
+    assert (np.asarray(E.route_ids_epoch(ids, table, 2)) == 1).all()
+    # full-active epoch degenerates to the plain router
+    np.testing.assert_array_equal(
+        np.asarray(E.route_ids_epoch(ids, table, 1)),
+        np.asarray(router.route_ids(ids, 4)))
+
+
+def test_route_id_epoch_python_twin():
+    table = E.EpochTable(((0, 2), (0, 1, 2)), n_rows=3)
+    for e in range(2):
+        for bid in [("d0", 7), ("d3", 0), "abc", 42]:
+            g = E.route_id_epoch(bid, table, e)
+            assert g in table.active[e]
+            assert g == table.active[e][
+                router.route_id(bid, len(table.active[e]))]
+
+
+# -- marker round --------------------------------------------------------------
+
+def test_append_reconfig_marker_aligns_all_groups():
+    ms = M.init_merge(3, 16)
+    entries = jnp.asarray([[10, 11], [20, -2], [30, 0]], jnp.int32)
+    counts = jnp.asarray([2, 2, 1], jnp.int32)
+    ms = M.append_entries(ms, entries, counts)
+    pre, pre_cnt = M.merged_prefix(ms)
+    ms2, r = E.append_reconfig_marker(ms)
+    logs = np.asarray(ms2.logs)
+    assert r == 2
+    assert (np.asarray(ms2.watermarks) == r + 1).all()
+    assert (logs[:, r] == M.RECONFIG).all()
+    assert logs[2, 1] == M.SKIP                  # lagging group padded
+    # tokens are dropped: merged output only gains previously-blocked
+    # real entries, never loses any (monotone across the flip)
+    out, cnt = M.merged_prefix(ms2)
+    assert int(cnt) >= int(pre_cnt)
+    assert np.asarray(out)[:int(pre_cnt)].tolist() == \
+        np.asarray(pre)[:int(pre_cnt)].tolist()
+    assert M.RECONFIG not in np.asarray(out)[:int(cnt)].tolist()
+
+
+def test_append_reconfig_marker_refuses_bad_logs():
+    ms = M.init_merge(2, 4)
+    entries = jnp.full((2, 4), 1, jnp.int32)
+    ms = M.append_entries(ms, entries, jnp.asarray([4, 4], jnp.int32))
+    with pytest.raises(ValueError, match="capacity"):
+        E.append_reconfig_marker(ms)             # no room for the marker
+    ms = M.init_merge(2, 4)
+    ms = ms._replace(overflowed=jnp.asarray([1, 0], jnp.int32))
+    with pytest.raises(ValueError, match="overflow"):
+        E.append_reconfig_marker(ms)
+
+
+# -- no-op flips: identical active set is an engine-state identity -------------
+
+def test_noop_flip_plain_is_engine_state_identity():
+    G, W = 2, 8
+    table = E.EpochTable(((0, 1), (0, 1)), n_rows=G)
+    a1, v1 = _tiles(G, W, [(g, w) for g in range(G) for w in range(4)],
+                    [(g, 6) for g in range(G)])
+    a2, v2 = _tiles(G, W, [(g, w) for g in range(G) for w in range(W)])
+
+    def fresh():
+        return (S.init_sharded(G, W, D, SQ), M.init_merge(G, 64),
+                S.default_slot_ids(G, W))
+
+    st_a, ms_a, sid_a = fresh()
+    st_a, ms_a, *_ = _run_plain(st_a, ms_a, sid_a, a1, v1, 3)
+    st_b, ms_b, sid_b = fresh()
+    st_b, ms_b, *_ = _run_plain(st_b, ms_b, sid_b, a1, v1, 3)
+    st_b, sid_b, ms_b, report = E.reconfigure_plain(
+        st_b, sid_b, ms_b, table, 0, 1)
+    assert report["moved"] == 0
+    assert report["removed"] == () == report["added"]
+    assert _trees_equal(st_a, st_b) and _trees_equal(sid_a, sid_b)
+    st_a, ms_a, mg_a, cnt_a, com_a = _run_plain(st_a, ms_a, sid_a, a2, v2, 4)
+    st_b, ms_b, mg_b, cnt_b, com_b = _run_plain(st_b, ms_b, sid_b, a2, v2, 4)
+    assert _trees_equal(st_a, st_b)
+    assert int(com_a) == int(com_b) == int(cnt_a) == int(cnt_b)
+    assert np.asarray(mg_a)[:int(com_a)].tolist() == \
+        np.asarray(mg_b)[:int(com_b)].tolist()
+
+
+def test_noop_flip_recycled_is_engine_state_identity():
+    G, W = 2, 8
+    table = E.EpochTable(((0, 1), (0, 1)), n_rows=G)
+    a1, v1 = _tiles(G, W, [(g, w) for g in range(G) for w in range(5)],
+                    [(g, 6) for g in range(G)])
+    a2, v2 = _tiles(G, W, [(g, w) for g in range(G) for w in range(W)])
+    a3, v3 = _tiles(G, W)
+
+    def phase2(rs, ms):
+        rs, ms, *_ = _run_recycled(rs, ms, a2, v2, 3)
+        return _run_recycled(rs, ms, a3, v3, 2)
+
+    rs_a = S.init_recycled(G, W, D, SQ, id_stride=STRIDE)
+    ms_a = M.init_merge(G, 256)
+    rs_a, ms_a, *_ = _run_recycled(rs_a, ms_a, a1, v1, 3)
+    rs_b = S.init_recycled(G, W, D, SQ, id_stride=STRIDE)
+    ms_b = M.init_merge(G, 256)
+    rs_b, ms_b, *_ = _run_recycled(rs_b, ms_b, a1, v1, 3)
+    rs_b, ms_b, report = E.reconfigure_recycled(
+        rs_b, ms_b, table, 0, 1, id_stride=STRIDE)
+    assert report["moved"] == 0 and report["sealed_retired"] == {}
+    assert _trees_equal(rs_a, rs_b)
+    rs_a, ms_a, mg_a, cnt_a, com_a = phase2(rs_a, ms_a)
+    rs_b, ms_b, mg_b, cnt_b, com_b = phase2(rs_b, ms_b)
+    assert _trees_equal(rs_a, rs_b)
+    assert int(com_a) == int(com_b) == int(cnt_a) == int(cnt_b)
+    assert np.asarray(mg_a)[:int(com_a)].tolist() == \
+        np.asarray(mg_b)[:int(com_b)].tolist()
+
+
+def test_noop_flip_gated_is_engine_state_identity():
+    G, W = 2, 8
+    table = E.EpochTable(((0, 1), (0, 1)), n_rows=G)
+    a1, v1 = _tiles(G, W, [(g, w) for g in range(G) for w in range(5)],
+                    [(g, 6) for g in range(G)])
+    a2, v2 = _tiles(G, W, [(g, w) for g in range(G) for w in range(W)])
+    holds = jnp.zeros((G, W, 1), jnp.uint32)
+
+    def run(gs, ms, a, v, T):
+        return S.run_gated_recycled_ticks_merged(
+            gs, ms, jnp.broadcast_to(a, (T, *a.shape)),
+            jnp.broadcast_to(holds, (T, *holds.shape)),
+            jnp.broadcast_to(v, (T, *v.shape)),
+            diss_majority=DM, seq_majority=SM, stab_majority=DM,
+            order_budget=BUDGET, watermark=1, id_stride=STRIDE,
+            fresh_stable=True)
+
+    def fresh():
+        return (S.init_gated_recycled(G, W, D, SQ, id_stride=STRIDE,
+                                      pre_stable=True),
+                M.init_merge(G, 256))
+
+    gs_a, ms_a = fresh()
+    gs_a, ms_a, *_ = run(gs_a, ms_a, a1, v1, 3)
+    gs_b, ms_b = fresh()
+    gs_b, ms_b, *_ = run(gs_b, ms_b, a1, v1, 3)
+    gs_b, ms_b, report = E.reconfigure_gated_recycled(
+        gs_b, ms_b, table, 0, 1, id_stride=STRIDE, fresh_stable=True)
+    assert report["moved"] == 0
+    assert _trees_equal(gs_a, gs_b)
+    gs_a, ms_a, mg_a, cnt_a, com_a = run(gs_a, ms_a, a2, v2, 4)
+    gs_b, ms_b, mg_b, cnt_b, com_b = run(gs_b, ms_b, a2, v2, 4)
+    assert _trees_equal(gs_a, gs_b)
+    assert int(cnt_a) == int(cnt_b) and int(com_a) == int(com_b)
+    assert np.asarray(mg_a)[:int(com_a)].tolist() == \
+        np.asarray(mg_b)[:int(com_b)].tolist()
+
+
+# -- grow ----------------------------------------------------------------------
+
+def test_grow_recycled_preserves_admitted_ids():
+    """G=2→3: partially-acked (admitted, unordered) ids survive the flip —
+    each lands in exactly one slot, is ordered exactly once, and the
+    pre-flip merged prefix is a prefix of the final order."""
+    G, W = 3, 8
+    table = E.EpochTable(((0, 1), (0, 1, 2)), n_rows=G)
+    rs = S.init_recycled(G, W, D, SQ, id_stride=STRIDE)
+    ms = M.init_merge(G, 256)
+    part = [(g, w) for g in (0, 1) for w in (6, 7)]
+    a, v = _tiles(G, W, [(g, w) for g in (0, 1) for w in range(6)], part)
+    rs, ms, mg0, cnt0, com0 = _run_recycled(rs, ms, a, v, 4)
+    assert int(com0) == int(cnt0) == 12
+    admitted = sorted(int(np.asarray(rs.slot_ids)[g, w]) for g, w in part)
+    pre = np.asarray(mg0)[:int(com0)].tolist()
+
+    rs, ms, report = E.reconfigure_recycled(
+        rs, ms, table, 0, 1, id_stride=STRIDE)
+    assert report["epoch"] == 1 and report["active"] == (0, 1, 2)
+    assert report["removed"] == () and report["added"] == (2,)
+    sids = np.asarray(rs.slot_ids)
+    for i in admitted:                 # id multiset preserved by the swap
+        assert (sids == i).sum() == 1
+    for mid, _src, dst, _dw in report["moves"]:
+        assert dst == int(E._route_rows_np(
+            np.asarray([mid], np.uint32), table, 1)[0])
+
+    a2, v2 = _tiles(G, W, [(g, w) for g in range(G) for w in range(W)])
+    rs, ms, *_ = _run_recycled(rs, ms, a2, v2, 4)
+    a3, v3 = _tiles(G, W)              # settle: decide, admit nothing new
+    rs, ms, mg, cnt, com = _run_recycled(rs, ms, a3, v3, 3)
+    out = np.asarray(mg)[:int(com)].tolist()
+    assert int(com) == int(cnt)
+    assert len(out) == len(set(out))
+    for i in admitted:
+        assert out.count(i) == 1
+    assert out[:len(pre)] == pre       # merged prefix monotone across flip
+
+
+def test_grow_plain_rehomes_to_fresh_row():
+    G, W = 3, 8
+    table = E.EpochTable(((0, 1), (0, 1, 2)), n_rows=G)
+    st = S.init_sharded(G, W, D, SQ)
+    sids = S.default_slot_ids(G, W)
+    ms = M.init_merge(G, 64)
+    a, v = _tiles(G, W, [(g, w) for g in (0, 1) for w in range(4)],
+                  [(g, w) for g in (0, 1) for w in (6, 7)])
+    st, ms, mg0, cnt0, com0 = _run_plain(st, ms, sids, a, v, 3)
+    pre = np.asarray(mg0)[:int(com0)].tolist()
+    st, sids, ms, report = E.reconfigure_plain(st, sids, ms, table, 0, 1)
+    assert report["added"] == (2,)
+    for mid, _src, dst, _dw in report["moves"]:
+        assert dst == int(E._route_rows_np(
+            np.asarray([mid], np.uint32), table, 1)[0])
+    # the swap keeps the global id set intact
+    assert sorted(np.asarray(sids).ravel().tolist()) == list(range(G * W))
+    a2, v2 = _tiles(G, W, [(g, w) for g in range(G) for w in range(W)])
+    st, ms, mg, cnt, com = _run_plain(st, ms, sids, a2, v2, 6)
+    out = np.asarray(mg)[:int(com)].tolist()
+    assert int(com) == int(cnt) == G * W     # every slot ordered+decided once
+    assert sorted(out) == list(range(G * W))
+    assert out[:len(pre)] == pre
+
+
+# -- shrink --------------------------------------------------------------------
+
+def test_shrink_recycled_seals_removed_rows():
+    """G=4→2: removed rows drain, seal (retired == next_instance) and
+    their admitted-unordered ids re-home to the surviving rows with
+    nothing lost or duplicated."""
+    G, W = 4, 8
+    table = E.EpochTable(((0, 1, 2, 3), (0, 1)), n_rows=G)
+    rs = S.init_recycled(G, W, D, SQ, id_stride=STRIDE)
+    ms = M.init_merge(G, 256)
+    part = [(g, w) for g in (2, 3) for w in (6, 7)]
+    a, v = _tiles(G, W, [(g, w) for g in range(G) for w in range(6)], part)
+    rs, ms, mg0, cnt0, com0 = _run_recycled(rs, ms, a, v, 4)
+    assert int(com0) == int(cnt0) == 24
+    admitted = sorted(int(np.asarray(rs.slot_ids)[g, w]) for g, w in part)
+    pre = np.asarray(mg0)[:int(com0)].tolist()
+
+    rs, ms, report = E.reconfigure_recycled(
+        rs, ms, table, 0, 1, id_stride=STRIDE)
+    assert report["removed"] == (2, 3) and report["added"] == ()
+    assert report["sealed_retired"] == {2: 6, 3: 6}
+    ret = np.asarray(rs.retired)
+    nxt = np.asarray(rs.q.next_instance)
+    for g in (2, 3):                   # sealed: whole history in the base
+        assert int(ret[g]) == int(nxt[g]) == 6
+        assert not (np.asarray(rs.q.instance)[g] >= 0).any()
+    # every admitted id of a removed row moved to a surviving row
+    assert sorted(m[0] for m in report["moves"]) == admitted
+    assert {m[2] for m in report["moves"]} <= {0, 1}
+
+    a2, v2 = _tiles(G, W, [(g, w) for g in (0, 1) for w in range(W)])
+    rs, ms, *_ = _run_recycled(rs, ms, a2, v2, 4)
+    a3, v3 = _tiles(G, W)
+    rs, ms, mg, cnt, com = _run_recycled(rs, ms, a3, v3, 3)
+    out = np.asarray(mg)[:int(com)].tolist()
+    assert int(com) == int(cnt)
+    assert len(out) == len(set(out))
+    for i in admitted:
+        assert out.count(i) == 1
+    assert out[:len(pre)] == pre
+
+
+def test_reconfigure_requires_drained_removed_rows():
+    G, W = 2, 8
+    table = E.EpochTable(((0, 1), (0,)), n_rows=G)
+    rs = S.init_recycled(G, W, D, SQ, id_stride=STRIDE)
+    ms = M.init_merge(G, 64)
+    acks = np.zeros((G, W, 1), np.uint32)
+    acks[1, :4] = FULL
+    votes = np.zeros((G, W, 1), np.uint32)   # ordered but never decided
+    rs, ms, *_ = _run_recycled(
+        rs, ms, jnp.asarray(acks), jnp.asarray(votes), 2)
+    assert not E.is_drained(rs.q, rows=[1])
+    with pytest.raises(ValueError, match="drain"):
+        E.reconfigure_recycled(rs, ms, table, 0, 1, id_stride=STRIDE)

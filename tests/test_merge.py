@@ -119,11 +119,47 @@ def test_skips_dropped_but_hold_positions():
 def test_entries_from_assigned_orders_and_pads():
     assigned = jnp.asarray([[5, -1, 6], [-1, -1, -1]], jnp.int32)
     slot_ids = jnp.asarray([[10, 11, 12], [20, 21, 22]], jnp.int32)
-    entries, counts = M.entries_from_assigned(assigned, slot_ids, 3)
+    entries, counts, dropped = M.entries_from_assigned(assigned, slot_ids, 3)
     assert np.asarray(entries).tolist() == [[10, 12, M.SKIP]] + \
         [[M.SKIP, M.SKIP, M.SKIP]]
     # counts equalized to the per-tick max so the idle group appends skips
     assert np.asarray(counts).tolist() == [2, 2]
+    assert int(dropped) == 0
+
+
+def test_entries_from_assigned_reports_overassignment():
+    """Regression: ids truncated by an undersized max_entries used to
+    vanish silently — they must be surfaced in the dropped count (and the
+    run_* loops debug-assert it stays zero)."""
+    assigned = jnp.asarray([[0, 1, 2], [3, -1, -1]], jnp.int32)
+    slot_ids = jnp.asarray([[10, 11, 12], [20, 21, 22]], jnp.int32)
+    entries, counts, dropped = M.entries_from_assigned(assigned, slot_ids, 2)
+    assert int(dropped) == 1                       # group 0 lost one id
+    assert np.asarray(counts).tolist() == [2, 2]   # clamped to max_entries
+    assert np.asarray(entries).tolist()[0] == [10, 11]
+    # widening the buffer back to the assignment count drops nothing
+    _, _, d2 = M.entries_from_assigned(assigned, slot_ids, 3)
+    assert int(d2) == 0
+
+
+def test_append_entries_reports_capacity_overflow():
+    """Regression: appends past capacity L advanced the watermark but
+    wrote no cells — silently corrupting the merged order. They are now
+    counted per group in MergeState.overflowed."""
+    st = M.init_merge(2, 4)
+    e = jnp.asarray([[1, 2, 3], [4, 5, -2]], jnp.int32)
+    st = M.append_entries(st, e, jnp.asarray([3, 3], jnp.int32))
+    assert np.asarray(st.overflowed).tolist() == [0, 0]
+    # group 0 appends 3 more: only 1 cell left → 2 overflow
+    st = M.append_entries(st, e, jnp.asarray([3, 0], jnp.int32))
+    assert np.asarray(st.overflowed).tolist() == [2, 0]
+    assert np.asarray(st.watermarks).tolist() == [6, 3]
+    # exactly-at-capacity append overflows nothing
+    st2 = M.init_merge(1, 3)
+    st2 = M.append_entries(st2, jnp.asarray([[7, 8, 9]], jnp.int32),
+                           jnp.asarray([3], jnp.int32))
+    assert np.asarray(st2.overflowed).tolist() == [0]
+    assert np.asarray(st2.logs).tolist() == [[7, 8, 9]]
 
 
 def test_merged_command_log_replicas_agree():

@@ -88,3 +88,64 @@ def test_python_route_deterministic_across_calls(seeds):
         assert first == [router.route_id(b, groups) for b in bids]
         if groups == 1:
             assert set(first) == {0}
+
+
+# -- hash versioning (ROUTER_HASH_VERSION) -------------------------------------
+
+def test_hash_version_default_and_legacy_formula():
+    """The default is the full-width v2 fold; version=1 reproduces the
+    legacy top-16-bit hash exactly (callers that persisted v1 placements
+    can keep routing compatibly)."""
+    import jax.numpy as jnp
+    assert router.ROUTER_HASH_VERSION == 2
+    ids = np.arange(0, 1 << 14, 7, dtype=np.uint32)
+    jids = jnp.asarray(ids)
+    for G in (2, 3, 8):
+        v_def = np.asarray(router.route_ids(jids, G))
+        assert np.array_equal(
+            v_def, np.asarray(router.route_ids(jids, G, version=2)))
+        h = (ids * np.uint32(2654435761)).astype(np.uint32)
+        legacy = ((h >> 16) % np.uint32(G)).astype(np.int32)
+        assert np.array_equal(
+            np.asarray(router.route_ids(jids, G, version=1)), legacy)
+        v2 = ((h ^ (h >> 16)) % np.uint32(G)).astype(np.int32)
+        assert np.array_equal(v_def, v2)
+
+
+def test_route_u32_matches_route_ids_elementwise():
+    """The numpy twin (host control plane / epochs re-homing) must place
+    every id exactly where the jax path does, for both hash versions."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+    for G in (1, 2, 5, 16):
+        for ver in (1, 2):
+            assert np.array_equal(
+                router.route_u32(ids, G, version=ver),
+                np.asarray(router.route_ids(jnp.asarray(ids), G,
+                                            version=ver)))
+
+
+def test_v2_uniformity_bound_consecutive_ids():
+    """Regression for the v1 defect: consecutive ids (the recycled
+    engine's refill pattern) must spread near-uniformly. Bound each
+    group's share of N consecutive ids to [0.5, 1.5]×N/G under v2."""
+    ids = np.arange(1 << 14, dtype=np.uint32)
+    for G in (2, 3, 5, 8, 13):
+        counts = np.bincount(router.route_u32(ids, G), minlength=G)
+        lo, hi = 0.5 * len(ids) / G, 1.5 * len(ids) / G
+        assert counts.min() >= lo and counts.max() <= hi, (G, counts)
+
+
+def test_v1_degenerate_at_large_group_counts():
+    """Documents why v2 exists: v1 keeps only the top 16 hash bits
+    (h >> 16 < 2^16), so with G > 2^16 every group index ≥ 2^16 is
+    structurally unreachable — half the fleet would sit idle. v2 folds
+    the low bits back in and reaches the whole range."""
+    rng = np.random.default_rng(11)
+    ids = rng.integers(0, 2**32, 1 << 14, dtype=np.uint32)
+    G = 1 << 17
+    v1 = router.route_u32(ids, G, version=1)
+    v2 = router.route_u32(ids, G, version=2)
+    assert v1.max() < 1 << 16          # upper half never reachable
+    assert v2.max() >= 1 << 16         # v2 covers the whole group space
