@@ -26,10 +26,15 @@ figure-level quantity the paper plots).
           engine ids/s across a live drain-then-switch epoch flip
           (active rows 2→3) vs an always-static 3-group fleet — written
           to BENCH_membership.json
+  pipeline  closed in-jax pipeline (repro.pipeline): end-to-end
+          workload → batcher → stability → ordering ids/s vs the
+          stage-isolated gated engine on the same config, plus per-lane
+          wire bytes against the §5.5 partitioned closed forms —
+          written to BENCH_pipeline.json
   kernels interpret-mode kernel sanity timings
 
-Run everything (``python benchmarks/run.py``) or one bench by its short
-name (``--only dissem``).
+Run everything (``python benchmarks/run.py``), one bench by its short
+name (``--only dissem``), or print the registry (``--list``).
 """
 from __future__ import annotations
 
@@ -256,7 +261,8 @@ def bench_sharded_engine() -> None:
     deterministic round-robin merge that produces the single learner log.
     """
     import jax
-    import repro.engine as E
+    from repro.engine.api import EngineConfig, create_state
+    from repro.engine import api
 
     W_TOTAL, D, SEQ, BUDGET, SLACK = 8192, 1000, 16, 64, 4
     words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
@@ -269,15 +275,12 @@ def bench_sharded_engine() -> None:
         # ordering budget is the only throughput limiter (as in §5.1)
         packs = np.full((T, G, Wg, words_d), 0xFFFFFFFF, np.uint32)
         pvotes = np.full((T, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
-        slot_ids = E.default_slot_ids(G, Wg)
-        st0 = E.init_sharded(G, Wg, D, SEQ)
-        ms0 = E.init_merge(G, T * BUDGET)
+        cfg = EngineConfig(groups=G, window=Wg, n_diss=D, n_seq=SEQ,
+                           order_budget=BUDGET, merge_capacity=T * BUDGET)
+        st0 = create_state(cfg)
 
         def run():
-            st, ms, merged, cnt, committed = E.run_sharded_ticks_merged(
-                st0, ms0, packs, pvotes, slot_ids,
-                diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
-                order_budget=BUDGET)
+            st, merged, cnt, committed = api.run(cfg, st0, packs, pvotes)
             # votes are saturated: every ordered id is also committed, so
             # the consumable prefix IS the full merged order
             return jax.block_until_ready(committed)
@@ -308,7 +311,8 @@ def bench_sustained_engine() -> None:
     rate over ≥4 generations stays ≥90% of the first generation's (G=4).
     """
     import jax
-    import repro.engine as E
+    from repro.engine.api import EngineConfig, RecyclingConfig, create_state
+    from repro.engine import api
 
     W_TOTAL, D, SEQ, BUDGET, GENS = 8192, 1000, 16, 64, 6
     words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
@@ -320,24 +324,23 @@ def bench_sustained_engine() -> None:
         packs = np.full((T_gen, G, Wg, words_d), 0xFFFFFFFF, np.uint32)
         pvotes = np.full((T_gen, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
         cap = GENS * T_gen * BUDGET + Wg
-        kw = dict(diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
-                  order_budget=BUDGET, watermark=Wg // 2, id_stride=STRIDE)
+        cfg = EngineConfig(
+            groups=G, window=Wg, n_diss=D, n_seq=SEQ, order_budget=BUDGET,
+            merge_capacity=cap,
+            recycling=RecyclingConfig(watermark=Wg // 2, id_stride=STRIDE))
 
-        def segment(rs, ms):
-            rs, ms, _, _, com = E.run_recycled_ticks_merged(
-                rs, ms, packs, pvotes, **kw)
+        def segment(st):
+            st, _, _, com = api.run(cfg, st, packs, pvotes)
             jax.block_until_ready(com)
-            return rs, ms, int(com)
+            return st, int(com)
 
         # warm the jit on throwaway state, then run GENS timed generations
-        segment(E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE),
-                E.init_merge(G, cap))
-        rs = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
-        ms = E.init_merge(G, cap)
+        segment(create_state(cfg))
+        st = create_state(cfg)
         committed, times = [0], []
         for _ in range(GENS):
             t0 = time.perf_counter()
-            rs, ms, com = segment(rs, ms)
+            st, com = segment(st)
             times.append(time.perf_counter() - t0)
             committed.append(com)
         per_gen_ids = np.diff(committed)
@@ -355,14 +358,12 @@ def bench_sustained_engine() -> None:
              "only variance)")
         # non-recycled contrast: same traffic, single-use window → dead
         # after generation 0
-        st = E.init_sharded(G, Wg, D, SEQ)
-        ms0 = E.init_merge(G, cap)
+        cfg_plain = EngineConfig(groups=G, window=Wg, n_diss=D, n_seq=SEQ,
+                                 order_budget=BUDGET, merge_capacity=cap)
+        st_p = create_state(cfg_plain)
         cold = [0]
         for _ in range(GENS):
-            st, ms0, _, _, c = E.run_sharded_ticks_merged(
-                st, ms0, packs, pvotes, E.default_slot_ids(G, Wg),
-                diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
-                order_budget=BUDGET)
+            st_p, _, _, c = api.run(cfg_plain, st_p, packs, pvotes)
             cold.append(int(jax.block_until_ready(c)))
         rows.append({
             "name": f"sustained_engine/G={G}", "G": G,
@@ -373,7 +374,7 @@ def bench_sustained_engine() -> None:
             "us_per_generation": [t * 1e6 for t in times],
             "ids_per_sec_per_generation": rates.tolist(),
             "sustained_ratio": sustained,
-            "retired_per_group": np.asarray(rs.retired).tolist(),
+            "retired_per_group": np.asarray(st.core.retired).tolist(),
             "single_use_committed_cumulative": cold[1:],
         })
     _write_bench_json("BENCH_window_recycling.json", rows)
@@ -394,16 +395,19 @@ def bench_membership() -> None:
     most the flip itself, not steady-state throughput."""
     import jax
     import jax.numpy as jnp
-    import repro.engine as E
     from repro.engine import epochs as EP
+    from repro.engine.api import Engine, EngineConfig, RecyclingConfig
 
     G, Wg, D, SEQ, BUDGET, T = 3, 512, 64, 16, 32, 32
     words_d, words_s = (D + 31) // 32, (SEQ + 31) // 32
     STRIDE = 1 << 22
     table = EP.EpochTable(((0, 1), (0, 1, 2)), n_rows=G)
-    kw = dict(diss_majority=D // 2 + 1, seq_majority=SEQ // 2 + 1,
-              order_budget=BUDGET, watermark=Wg // 2, id_stride=STRIDE)
     cap = 8 * T * BUDGET
+    cfg = EngineConfig(
+        groups=G, window=Wg, n_diss=D, n_seq=SEQ, order_budget=BUDGET,
+        merge_capacity=cap,
+        recycling=RecyclingConfig(watermark=Wg // 2, id_stride=STRIDE),
+        epochs=table)
 
     def traffic(active):
         # saturated acks on the active rows only; votes everywhere
@@ -415,52 +419,47 @@ def bench_membership() -> None:
 
     tr_pre, tr_post = traffic(table.active[0]), traffic(table.active[1])
 
-    def segment(rs, ms, tr):
-        rs, ms, _, _, com = E.run_recycled_ticks_merged(
-            rs, ms, tr[0], tr[1], **kw)
+    def segment(eng, tr):
+        _, _, com = eng.run(tr[0], tr[1])
         jax.block_until_ready(com)
-        return rs, ms, int(com)
+        return int(com)
 
-    def timed(rs, ms, tr):
+    def timed(eng, tr):
         t0 = time.perf_counter()
-        rs, ms, com = segment(rs, ms, tr)
-        return rs, ms, com, time.perf_counter() - t0
+        com = segment(eng, tr)
+        return com, time.perf_counter() - t0
 
-    # warm the jit on throwaway state
-    segment(E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE),
-            E.init_merge(G, cap), tr_pre)
+    # warm the jit on a throwaway engine
+    segment(Engine.create(cfg), tr_pre)
 
     # epoch 0: two active rows
-    rs = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
-    ms = E.init_merge(G, cap)
-    rs, ms, com_pre, t_pre = timed(rs, ms, tr_pre)
+    eng = Engine.create(cfg)
+    com_pre, t_pre = timed(eng, tr_pre)
     pre_rate = com_pre / t_pre
     # full drain before the switch (saturated votes usually land
     # in-segment; tick vote-only for any tail)
     za = jnp.zeros((G, Wg, words_d), jnp.uint32)
     zv = jnp.full((G, Wg, words_s), jnp.uint32(0xFFFFFFFF))
     drain_ticks = 0
-    while not EP.is_drained(rs.q) and drain_ticks < 32:
-        rs, ms, _ = E.recycled_tick_merged(rs, ms, za, zv, **kw)
+    while not EP.is_drained(eng.state.core.q) and drain_ticks < 32:
+        eng.tick(za, zv)
         drain_ticks += 1
-    assert EP.is_drained(rs.q), "drain did not converge"
+    assert EP.is_drained(eng.state.core.q), "drain did not converge"
     # the flip (host-side control plane)
     t0 = time.perf_counter()
-    rs, ms, report = EP.reconfigure_recycled(
-        rs, ms, table, 0, 1, id_stride=STRIDE)
+    report = eng.reconfigure(1)
     flip_us = (time.perf_counter() - t0) * 1e6
-    com_flip = int(E.recycled_committed_prefix(rs, ms)[2])
+    com_flip = int(eng.committed()[2])
     # epoch 1: all three rows
-    rs, ms, com_post, t_post = timed(rs, ms, tr_post)
+    com_post, t_post = timed(eng, tr_post)
     post_rate = (com_post - com_flip) / t_post
 
     # static baseline: all three rows active from t=0; steady-state rate
     # from the second generation segment (matching the post-flip segment,
     # which also runs on a warm engine)
-    rs_s = E.init_recycled(G, Wg, D, SEQ, id_stride=STRIDE)
-    ms_s = E.init_merge(G, cap)
-    rs_s, ms_s, com_s1, _ = timed(rs_s, ms_s, tr_post)
-    rs_s, ms_s, com_s2, t_s2 = timed(rs_s, ms_s, tr_post)
+    eng_s = Engine.create(cfg)
+    com_s1, _ = timed(eng_s, tr_post)
+    com_s2, t_s2 = timed(eng_s, tr_post)
     static_rate = (com_s2 - com_s1) / t_s2
 
     ratio = post_rate / static_rate
@@ -491,6 +490,115 @@ def bench_membership() -> None:
         "static_ids_per_sec": static_rate,
         "post_flip_vs_static": ratio,
         "meets_bar": bool(ratio >= 0.9),
+    }])
+
+
+def bench_pipeline() -> None:
+    """Closed in-jax pipeline (repro.pipeline): end-to-end decided
+    ids/second, workload intake through the merged consumable log in one
+    fused jit scan, vs the *stage-isolated* gated engine fed pre-built
+    saturated tiles on the identical EngineConfig.
+
+    The workload saturates the ordering budget (admitted batches/tick >
+    G × order_budget), so both runs are budget-limited and the ratio
+    isolates what the extra stages (client gather, byte-budget batching,
+    epoch routing, admission scatter, delivery-lag tile build) cost per
+    tick. Acceptance bar: ≥ 0.85×. Byte accounting is cross-checked
+    exactly: every lane flushes one full batch of k = C/D requests per
+    tick, so measured per-lane wire bytes must equal ``batch_bytes(k, q)``
+    per tick, and the global-vs-partitioned delta of the §5.5 closed
+    forms must equal the measured batch size's replication sharding
+    (``analytical.bytes_ht_disseminator_partitioned``)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.htpaxos import batch_bytes
+    from repro.core.network import ID_BYTES, OVERHEAD
+    from repro.engine import api
+    from repro.engine.api import EngineConfig, GatingConfig, create_state
+    from repro.pipeline import (PipelineConfig, Workload, build_route_table,
+                                committed, init_pipeline, run_pipeline)
+
+    G, W, D, SEQ, B, T = 2, 2048, 8, 16, 2, 128
+    C, Q = 64, 1024                     # clients, payload bytes
+    k = C // D                          # requests per lane per tick
+    mp = D // G                         # §5.5 partition size
+    per_batch = batch_bytes(k, Q)
+    pcfg = PipelineConfig(
+        engine=EngineConfig(
+            groups=G, window=W, n_diss=D, n_seq=SEQ, order_budget=B,
+            merge_capacity=2 * G * T * B,
+            gating=GatingConfig(stab_majority=mp // 2 + 1,
+                                n_diss_partition=mp)),
+        n_clients=C, budget_bytes=per_batch, capacity=W,
+        seq_capacity=2 * T)
+    # full-rate deterministic workload: every client, every tick
+    wl = Workload(jnp.ones((T, C), bool), jnp.full((T, C), Q, jnp.int32))
+    rt = jnp.asarray(build_route_table(pcfg))
+
+    def run_pipe():
+        st, _ = run_pipeline(pcfg, init_pipeline(pcfg), wl.arrived,
+                             wl.sizes, rt)
+        jax.block_until_ready(st.tick)
+        return st
+    us_pipe = _t(run_pipe, n=5)
+    st = run_pipe()
+    assert not bool(st.overflowed)
+    pipe_ids = int(committed(pcfg, st)[2])
+    pipe_rate = pipe_ids / (us_pipe / 1e6)
+
+    # stage-isolated gated engine: same config, pre-built saturated tiles
+    words_d = (D + 31) // 32
+    words_s = (SEQ + 31) // 32
+    words_h = (mp + 31) // 32
+    acks = jnp.asarray(np.full((T, G, W, words_d), 0xFFFFFFFF, np.uint32))
+    votes = jnp.asarray(np.full((T, G, W, words_s), 0xFFFFFFFF, np.uint32))
+    holds = jnp.asarray(np.full((T, G, W, words_h), 0xFFFFFFFF, np.uint32))
+
+    def run_eng():
+        _, _, _, com = api.run(pcfg.engine, create_state(pcfg.engine),
+                               acks, votes, holds_seq=holds)
+        return int(jax.block_until_ready(com))
+    us_eng = _t(run_eng, n=5)
+    eng_ids = run_eng()
+    eng_rate = eng_ids / (us_eng / 1e6)
+    ratio = pipe_rate / eng_rate
+
+    # exact byte accounting: one k-request batch per lane per tick
+    per_lane = np.asarray(st.flushed_bytes)
+    assert (per_lane == T * per_batch).all(), per_lane
+    assert (np.asarray(st.n_flushed) == T).all()
+    cf_part = A.bytes_ht_disseminator_partitioned(C, D, SEQ, Q, G)
+    cf_glob = A.bytes_ht_disseminator(C, D, SEQ, Q)
+    # sharding replication from D to mp nodes removes (D - mp) received
+    # batches (of the measured wire size), their acks, and their id bytes
+    assert cf_glob["in"] - cf_part["in"] == \
+        (D - mp) * (per_batch + OVERHEAD + 2 * ID_BYTES)
+    node_in_per_tick = mp * per_batch       # all partition batches received
+
+    emit("pipeline/end_to_end", us_pipe,
+         f"{pipe_rate:.0f} ids/s ({pipe_ids} ids, {T} ticks)")
+    emit("pipeline/engine_isolated", us_eng,
+         f"{eng_rate:.0f} ids/s ({eng_ids} ids, {T} ticks)")
+    emit("pipeline/end_to_end_vs_isolated", 0.1,
+         f"{ratio:.3f} (acceptance bar: >=0.85; ids/tick are exact — "
+         "wall-time jitter on a loaded host is the only variance)")
+    emit("pipeline/per_lane_bytes_per_tick", 0.1,
+         f"{per_batch} B (= batch_bytes(k={k}, q={Q}); closed-form "
+         f"partitioned in/node: {node_in_per_tick} B/tick)")
+    _write_bench_json("BENCH_pipeline.json", [{
+        "name": "pipeline", "G": G, "window_per_group": W,
+        "n_diss": D, "n_diss_partition": mp, "n_seq": SEQ,
+        "order_budget": B, "ticks": T, "n_clients": C,
+        "request_bytes": Q, "requests_per_lane_tick": k,
+        "batch_wire_bytes": int(per_batch),
+        "per_lane_bytes_per_tick": int(per_batch),
+        "per_node_replication_in_bytes_per_tick": int(node_in_per_tick),
+        "closed_form_partitioned_in": cf_part["in"],
+        "closed_form_global_in": cf_glob["in"],
+        "pipeline_ids": pipe_ids, "pipeline_ids_per_sec": pipe_rate,
+        "engine_ids": eng_ids, "engine_ids_per_sec": eng_rate,
+        "end_to_end_vs_isolated": ratio,
+        "meets_bar": bool(ratio >= 0.85),
     }])
 
 
@@ -602,15 +710,31 @@ BENCHES = {
     "delays": bench_delays, "sim_throughput": bench_sim_throughput,
     "engine": bench_engine, "sharded_engine": bench_sharded_engine,
     "sustained_engine": bench_sustained_engine, "dissem": bench_dissem,
-    "membership": bench_membership, "kernels": bench_kernels,
+    "membership": bench_membership, "pipeline": bench_pipeline,
+    "kernels": bench_kernels,
 }
 
 
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--only", choices=sorted(BENCHES), default=None,
-                   help="run a single bench instead of the full suite")
+    p.add_argument("--only", default=None, metavar="NAME",
+                   help="run a single bench instead of the full suite "
+                        f"(one of: {', '.join(sorted(BENCHES))})")
+    p.add_argument("--list", action="store_true",
+                   help="print the bench registry, one name per line, "
+                        "and exit")
     args = p.parse_args(argv)
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return
+    # validate by hand rather than via argparse choices= so an unknown
+    # name always fails loudly with the full list, independent of how
+    # the argument wiring evolves (a silent exit-0 here looks exactly
+    # like a bench that produced no rows)
+    if args.only is not None and args.only not in BENCHES:
+        p.error(f"unknown bench {args.only!r} — valid names: "
+                + ", ".join(sorted(BENCHES)))
     print("name,us_per_call,derived")
     for name, b in BENCHES.items():
         if args.only is None or name == args.only:

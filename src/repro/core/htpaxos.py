@@ -52,6 +52,7 @@ from typing import Optional
 from .agents import Agent, SimBase
 from .classic import NOOP, OrderingConfig, PaxosSequencer
 from .network import ID_BYTES, Lan, Msg, OVERHEAD
+from ..dissem.batcher import BatchAccumulator, EMPTY_BATCH_BYTES
 from ..engine.epochs import EpochTable, route_id_epoch
 from ..engine.router import partition_ids
 
@@ -108,6 +109,18 @@ class HTConfig:
     # groups are never created or destroyed mid-run, only (de)activated.
     initial_active: Optional[tuple] = None
     reconfig_schedule: tuple = ()
+    # closed-pipeline workload injection: (time, client_idx, payload_bytes)
+    # triples. When non-empty, clients issue exactly these requests at
+    # exactly these times (the self-driven n_requests loop is disabled) —
+    # the DES side of the closed-pipeline cross-validation replays the
+    # same pre-drawn Workload the jax pipeline consumed
+    # (repro.pipeline.workload.Workload.schedule()).
+    workload_schedule: tuple = ()
+    # byte-budget batching (§4.1 step 13): when set, disseminators batch
+    # by wire bytes through dissem.batcher.BatchAccumulator instead of by
+    # count (batch_size is then ignored); per-request payload sizes ride
+    # the request messages, so batches carry their true wire size.
+    batch_budget_bytes: Optional[int] = None
 
 
 def batch_bytes(n_requests: int, request_bytes: int) -> int:
@@ -129,6 +142,7 @@ class ClientNode(Agent):
         self.next_seq = 0
         self.pending: dict[tuple, float] = {}     # rid -> send time
         self.replied: dict[tuple, float] = {}     # rid -> reply time
+        self.req_size: dict[tuple, int] = {}      # rid -> payload override
         self._fixed_diss = sim.diss_ids[
             int(node_id[1:]) % len(sim.diss_ids)] if sim.diss_ids else None
         self.after(start_t if start_t > 0 else 0.0, self._issue_next) \
@@ -146,23 +160,33 @@ class ClientNode(Agent):
     def _issue_next(self) -> None:
         if self.next_seq >= self.n_requests:
             return
+        self.inject_request()
+        if self.next_seq < self.n_requests:
+            self.after(self.gap, self._issue_next)
+
+    def inject_request(self, size: Optional[int] = None) -> None:
+        """[steps 1–6] Issue one request now, with an optional per-request
+        payload size override — the workload_schedule entry point (the DES
+        twin of one Workload cell). Shares the self-driven loop's retry
+        machinery, so Δ1 semantics are identical either way."""
         rid = (self.node_id, self.next_seq)
         self.next_seq += 1
+        if size is not None:
+            self.req_size[rid] = int(size)
         self.pending[rid] = self.sched.now
         self._send_request(rid)
         self.periodic(self.cfg.d1_client_retry,                 # [steps 5–6]
                       lambda rid=rid: self._send_request(rid),
                       stop=lambda rid=rid: rid in self.replied)
-        if self.next_seq < self.n_requests:
-            self.after(self.gap, self._issue_next)
 
     def _send_request(self, rid) -> None:
         if rid in self.replied:
             return
         d = self._pick_diss()
+        q = self.req_size.get(rid, self.cfg.request_bytes)
         self.send(self.hsim.lan1, d, "request",                 # [step 4]
-                  size=OVERHEAD + ID_BYTES + self.cfg.request_bytes,
-                  rid=rid)
+                  size=OVERHEAD + ID_BYTES + q,
+                  rid=rid, req_bytes=q)
 
     def on_message(self, msg: Msg, lan: Lan) -> None:
         if msg.kind == "reply":                                  # [step 7]
@@ -243,6 +267,12 @@ class DissNode(MergedExecutionMixin, Agent):
         # volatile
         self.pending_requests: list[tuple] = []      # rids awaiting batching
         self.req_client: dict[tuple, str] = {}       # rid -> client id
+        self.req_bytes: dict[tuple, int] = {}        # rid -> payload bytes
+        self.bid_nbytes: dict[tuple, int] = {}       # bid -> batch wire bytes
+        # byte-budget batching (§4.1 step 13): the streaming accumulator
+        # mirrors pending_requests one-to-one (same length, same order)
+        self._acc = BatchAccumulator(self.cfg.batch_budget_bytes) \
+            if self.cfg.batch_budget_bytes is not None else None
         self.own_acks: dict[tuple, set] = {}         # batch_id -> diss acks
         self.own_batches: dict[tuple, tuple] = {}    # batch_id -> rids
         self.replied_batches: set = set()
@@ -265,6 +295,8 @@ class DissNode(MergedExecutionMixin, Agent):
         if k == "request":
             rid = p["rid"]
             self.req_client[rid] = msg.src
+            if "req_bytes" in p:
+                self.req_bytes[rid] = p["req_bytes"]
             bid = self._rid_batch(rid)
             if bid is not None:
                 # duplicate client retry for an already-batched request:
@@ -275,14 +307,25 @@ class DissNode(MergedExecutionMixin, Agent):
             if rid in self.pending_requests:
                 return
             self.pending_requests.append(rid)
-            if len(self.pending_requests) >= self.cfg.batch_size:
+            if self._acc is not None:
+                # [step 13, byte budget] admitting this request may close
+                # the previous batch (the accumulator returns it); the new
+                # request always joins the (possibly fresh) open batch
+                if self._acc.add(self._rid_q(rid)) is not None:
+                    closed = tuple(self.pending_requests[:-1])
+                    self.pending_requests = [rid]
+                    self._emit_batch(closed)
+                if not self._batch_timer_armed:
+                    self._batch_timer_armed = True
+                    self.after(self.cfg.batch_linger, self._flush_batch)
+            elif len(self.pending_requests) >= self.cfg.batch_size:
                 self._flush_batch()
             elif not self._batch_timer_armed:
                 self._batch_timer_armed = True
                 self.after(self.cfg.batch_linger, self._flush_batch)
         elif k == "batch":                                    # [steps 15–18]
             self._on_batch(p["bid"], p["rids"], msg.src,
-                           p.get("epoch", 0))
+                           p.get("epoch", 0), p.get("nbytes"))
         elif k == "batch_ack":                                # [step 20]
             bid = p["bid"]
             if bid in self.own_acks:
@@ -294,10 +337,12 @@ class DissNode(MergedExecutionMixin, Agent):
             bid = p["bid"]
             rids = self.stable["requests_set"].get(bid)
             if rids is not None:
+                nbytes = self.bid_nbytes.get(
+                    bid, batch_bytes(len(rids), self.cfg.request_bytes))
                 self.send(self.hsim.lan1, msg.src, "batch",
-                          size=batch_bytes(len(rids), self.cfg.request_bytes),
-                          bid=bid, rids=rids,
-                          epoch=self.stable["bid_epoch"].get(bid, 0))
+                          size=nbytes, bid=bid, rids=rids,
+                          epoch=self.stable["bid_epoch"].get(bid, 0),
+                          nbytes=nbytes)
         elif k == "decision":                                 # ordering layer
             self._on_decision(p["entries"],
                               self.hsim.group_of_seq.get(msg.src, 0))
@@ -308,12 +353,34 @@ class DissNode(MergedExecutionMixin, Agent):
                 return bid
         return None
 
+    def _rid_q(self, rid) -> int:
+        """Payload bytes of one request (per-request override, else the
+        config's uniform q)."""
+        return self.req_bytes.get(rid, self.cfg.request_bytes)
+
+    def _batch_wire(self, rids) -> int:
+        """Wire bytes of a batch of ``rids``: header + Σ (id + payload).
+        Uniform-q batches reduce to ``batch_bytes`` exactly."""
+        return EMPTY_BATCH_BYTES + sum(ID_BYTES + self._rid_q(r)
+                                       for r in rids)
+
     def _flush_batch(self) -> None:
         self._batch_timer_armed = False
+        if self._acc is not None:
+            # budget mode: the linger timer drains the accumulator tail
+            if self._acc.flush() is None:
+                return
+            rids = tuple(self.pending_requests)
+            self.pending_requests = []
+            self._emit_batch(rids)
+            return
         if not self.pending_requests:
             return
         rids = tuple(self.pending_requests)
         self.pending_requests = []
+        self._emit_batch(rids)
+
+    def _emit_batch(self, rids: tuple) -> None:
         bid = (self.node_id, self.next_batch)
         self.next_batch += 1
         self.own_batches[bid] = rids
@@ -322,17 +389,24 @@ class DissNode(MergedExecutionMixin, Agent):
         # copy of the batch message (incl. Δ5 resends) so all disseminators
         # id-multicast this bid to the same owner group forever
         epoch = self.stable["bid_epoch"].setdefault(bid, self.epoch)
+        nbytes = self._batch_wire(rids)
+        self.bid_nbytes[bid] = nbytes
         # [step 14] multicast batch to all disseminators and learners, LAN-1
         # (self included — the paper counts self-delivery, §5.1.1.1)
         dsts = self.hsim.diss_ids + self.hsim.learner_ids
         self.multicast(self.hsim.lan1, dsts, "batch",
-                       size=batch_bytes(len(rids), self.cfg.request_bytes),
-                       bid=bid, rids=rids, epoch=epoch)
+                       size=nbytes, bid=bid, rids=rids, epoch=epoch,
+                       nbytes=nbytes)
 
-    def _on_batch(self, bid, rids, src, epoch: int = 0) -> None:
+    def _on_batch(self, bid, rids, src, epoch: int = 0,
+                  nbytes: Optional[int] = None) -> None:
         rs = self.stable["requests_set"]
         known = bid in rs
         rs[bid] = rids                                         # [step 16]
+        if nbytes is not None:
+            # remember the origin's wire size so Δ5 resends from *this*
+            # node replay the true (per-request-sized) batch bytes
+            self.bid_nbytes.setdefault(bid, nbytes)
         # first-writer-wins: the origin's pin arrived with the message; a
         # stale duplicate can never re-route an already-pinned bid
         self.stable["bid_epoch"].setdefault(bid, epoch)
@@ -455,6 +529,8 @@ class DissNode(MergedExecutionMixin, Agent):
         self.pending_requests = []
         self.own_acks = {}
         self.id_outbox = []
+        if self._acc is not None:
+            self._acc = BatchAccumulator(self.cfg.batch_budget_bytes)
         self.epoch = self.hsim.current_epoch   # re-learn the routing epoch
         self._batch_timer_armed = False
         self._id_timer_armed = False
@@ -693,8 +769,12 @@ class HTPaxosSim(SimBase):
             for g, grp in enumerate(self.seq_groups)
             for i, s in enumerate(grp)]
         self.learners = [LearnerNode(self, l) for l in self.learner_ids]
+        # workload_schedule replaces the clients' self-driven request loop
+        # with exact scheduled injections (closed-pipeline cross-validation)
         self.clients = [
-            ClientNode(self, c, n_requests=requests_per_client,
+            ClientNode(self, c,
+                       n_requests=0 if cfg.workload_schedule
+                       else requests_per_client,
                        gap=client_gap)
             for c in self.client_ids]
         self.attach_all()
@@ -704,6 +784,13 @@ class HTPaxosSim(SimBase):
         # schedule's absolute times are also delays)
         for k, (t, _active) in enumerate(cfg.reconfig_schedule):
             self.sched.after(t, lambda e=k + 1: self._apply_reconfig(e))
+        for (t, ci, size) in cfg.workload_schedule:
+            if not 0 <= int(ci) < cfg.n_clients:
+                raise ValueError(f"workload_schedule client {ci} outside "
+                                 f"[0, {cfg.n_clients})")
+            cl = self.clients[int(ci)]
+            self.sched.after(t, lambda cl=cl, q=int(size):
+                             cl.inject_request(q))
 
     def _apply_reconfig(self, epoch: int) -> None:
         """Admin control-plane event at a scheduled membership switch:

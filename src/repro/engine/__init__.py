@@ -14,15 +14,26 @@ per-epoch active-row sets for the router, and the ``reconfigure_*``
 control-plane functions drain-then-switch a live engine between epochs
 (RECONFIG marker row in every merge log, recycle-aware state transfer).
 
+**Entry point: the ``api`` facade.** The four engine families
+(plain/recycled/gated/gated_recycled) are unified behind
+``repro.engine.api.Engine`` — ``Engine.create(EngineConfig(...))`` with
+``.tick()`` / ``.run()`` / ``.recycle()`` / ``.reconfigure()``. The
+legacy per-family names are still importable here for compatibility but
+emit ``DeprecationWarning`` at package-level access; migrate to the
+facade (see README "Engine facade" table), or import from the defining
+submodule (``repro.engine.sharded`` / ``repro.engine.epochs``) where the
+functions live on warning-free.
+
 ``router`` and ``epochs`` are jax-free at import (the pure-python DES
-uses both); ``merge``/``sharded`` pull in jax and are loaded lazily
-(PEP 562) so DES imports stay lightweight.
+uses both); ``merge``/``sharded``/``api`` pull in jax and are loaded
+lazily (PEP 562) so DES imports stay lightweight.
 """
+import warnings
+
 from .router import (ROUTER_HASH_VERSION, partition_ids, route_id,
                      route_ids, route_u32)
 from .epochs import (EpochTable, append_reconfig_marker, is_drained,
-                     reconfigure_gated_recycled, reconfigure_plain,
-                     reconfigure_recycled, route_id_epoch, route_ids_epoch)
+                     route_id_epoch, route_ids_epoch)
 
 _LAZY = {
     "MergeState": "merge", "PAD": "merge", "SKIP": "merge",
@@ -45,20 +56,69 @@ _LAZY = {
     "init_gated_recycled": "sharded",
     "run_gated_ticks_merged": "sharded",
     "run_gated_recycled_ticks_merged": "sharded",
+    "reconfigure_plain": "epochs", "reconfigure_recycled": "epochs",
+    "reconfigure_gated_recycled": "epochs",
+    "Engine": "api", "EngineConfig": "api", "EngineState": "api",
+    "RecyclingConfig": "api", "GatingConfig": "api",
+}
+
+# The four per-family function groups the api.Engine facade replaces.
+# Package-level access warns; the defining submodules stay warning-free
+# (the facade itself and the parity tests import from there).
+_DEPRECATED = {
+    "init_sharded", "sharded_tick", "sharded_tick_dense",
+    "run_sharded_ticks", "run_sharded_ticks_merged",
+    "init_recycled", "recycle_groups", "recycled_tick_merged",
+    "recycled_committed_prefix", "run_recycled_ticks_merged",
+    "gated_tick", "run_gated_ticks_merged",
+    "init_gated_recycled", "gated_recycle_groups",
+    "gated_recycled_tick_merged", "run_gated_recycled_ticks_merged",
+    "reconfigure_plain", "reconfigure_recycled",
+    "reconfigure_gated_recycled",
+}
+
+_FACADE_HINT = {
+    "init_sharded": "Engine.create(EngineConfig(...))",
+    "init_recycled": "Engine.create(EngineConfig(..., recycling=...))",
+    "init_gated_recycled":
+        "Engine.create(EngineConfig(..., recycling=..., gating=...))",
+    "sharded_tick": "Engine.tick(acks, votes)",
+    "sharded_tick_dense": "Engine.tick(acks, votes)",
+    "gated_tick": "Engine.tick(acks, votes, holds)",
+    "recycled_tick_merged": "Engine.tick(acks, votes)",
+    "gated_recycled_tick_merged": "Engine.tick(acks, votes, holds)",
+    "run_sharded_ticks": "Engine.run(acks_seq, votes_seq)",
+    "run_sharded_ticks_merged": "Engine.run(acks_seq, votes_seq)",
+    "run_recycled_ticks_merged": "Engine.run(acks_seq, votes_seq)",
+    "run_gated_ticks_merged":
+        "Engine.run(acks_seq, votes_seq, holds_seq)",
+    "run_gated_recycled_ticks_merged":
+        "Engine.run(acks_seq, votes_seq, holds_seq)",
+    "recycle_groups": "Engine.recycle()",
+    "gated_recycle_groups": "Engine.recycle()",
+    "recycled_committed_prefix": "Engine.committed()",
+    "reconfigure_plain": "Engine.reconfigure(new_epoch)",
+    "reconfigure_recycled": "Engine.reconfigure(new_epoch)",
+    "reconfigure_gated_recycled": "Engine.reconfigure(new_epoch)",
 }
 
 __all__ = ["ROUTER_HASH_VERSION", "partition_ids", "route_id", "route_ids",
            "route_u32", "EpochTable", "append_reconfig_marker", "is_drained",
-           "reconfigure_gated_recycled", "reconfigure_plain",
-           "reconfigure_recycled", "route_id_epoch", "route_ids_epoch",
-           *_LAZY]
+           "route_id_epoch", "route_ids_epoch", *_LAZY]
 
 
 def __getattr__(name):
-    modname = "merge" if name == "merge" else \
-        "sharded" if name == "sharded" else _LAZY.get(name)
+    modname = name if name in ("merge", "sharded", "api", "epochs") \
+        else _LAZY.get(name)
     if modname is None:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.engine.{name} is deprecated: use the repro.engine.api "
+            f"facade ({_FACADE_HINT[name]}) — or import from "
+            f"repro.engine.{modname} directly if you need the raw "
+            "function",
+            DeprecationWarning, stacklevel=2)
     import importlib
     mod = importlib.import_module(f".{modname}", __name__)
     return mod if name == modname else getattr(mod, name)

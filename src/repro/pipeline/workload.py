@@ -1,0 +1,133 @@
+"""Vectorized client workload model (the pipeline's traffic source).
+
+HT-Paxos's throughput story starts at the clients (§4.1 steps 1–4):
+``n_clients`` clients each submit requests to a statically-assigned
+disseminator (the DES twin's ``random_client_target=False`` rule,
+``client c → disseminator c mod n_diss``). A :class:`Workload` is the
+whole run's traffic, **pre-drawn** as dense per-tick arrays:
+
+* ``arrived[t, c]`` — did client ``c`` submit a request at tick ``t``;
+* ``sizes[t, c]`` — its payload bytes (0 where nothing arrived).
+
+Pre-drawing is what makes the closed pipeline cross-validatable: the
+same concrete arrays drive both the jax pipeline
+(:mod:`repro.pipeline.closed`) and the discrete-event simulator
+(``HTPaxosSim`` via :meth:`Workload.schedule`), so neither side is
+derived from the other's trace — they only share the workload.
+
+:class:`WorkloadModel` draws random workloads (Bernoulli arrivals at
+``arrival_rate`` per client-tick, sizes from a categorical distribution)
+deterministically from a jax PRNG key; :meth:`Workload.from_schedule`
+builds exact hand-constructed traffic (what the DES cross-validation
+uses for its alignment schedules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class Workload(NamedTuple):
+    """One run's client traffic as dense arrays (ticks × clients)."""
+    arrived: jax.Array      # bool[T, C]
+    sizes: jax.Array        # int32[T, C]; 0 where not arrived
+
+    @property
+    def n_ticks(self) -> int:
+        return self.arrived.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return self.arrived.shape[1]
+
+    @property
+    def n_requests(self) -> int:
+        return int(np.asarray(self.arrived).sum())
+
+    @property
+    def total_bytes(self) -> int:
+        return int(np.asarray(self.sizes, dtype=np.int64).sum())
+
+    @classmethod
+    def from_schedule(cls, events, *, ticks: int,
+                      n_clients: int) -> "Workload":
+        """Exact workload from ``(tick, client, size)`` triples. At most
+        one request per (tick, client) cell — duplicates raise (the dense
+        representation cannot hold two arrivals in one cell)."""
+        arrived = np.zeros((ticks, n_clients), bool)
+        sizes = np.zeros((ticks, n_clients), np.int32)
+        for (t, c, size) in events:
+            if not 0 <= t < ticks:
+                raise ValueError(f"tick {t} outside [0, {ticks})")
+            if not 0 <= c < n_clients:
+                raise ValueError(f"client {c} outside [0, {n_clients})")
+            if arrived[t, c]:
+                raise ValueError(f"duplicate arrival at tick={t} "
+                                 f"client={c}")
+            if size < 0:
+                raise ValueError(f"negative request size {size}")
+            arrived[t, c] = True
+            sizes[t, c] = size
+        return cls(jnp.asarray(arrived), jnp.asarray(sizes))
+
+    def schedule(self) -> list[tuple[int, int, int]]:
+        """The workload as ``(tick, client, size)`` triples in (tick,
+        client) order — the injection list the DES twin consumes. Exact
+        inverse of :meth:`from_schedule` on the same arrays."""
+        arrived = np.asarray(self.arrived)
+        sizes = np.asarray(self.sizes)
+        return [(int(t), int(c), int(sizes[t, c]))
+                for t, c in zip(*np.nonzero(arrived))]
+
+
+@dataclass(frozen=True)
+class WorkloadModel:
+    """Random-workload generator with everything pre-drawable.
+
+    ``arrival_rate`` is the per-client per-tick Bernoulli probability;
+    sizes are drawn from ``size_choices`` with ``size_probs`` weights
+    (``None`` → uniform over the choices). Same key → same
+    :class:`Workload`, bit for bit (pinned by the determinism tests).
+    """
+    n_clients: int
+    arrival_rate: float
+    size_choices: tuple[int, ...] = (1024,)
+    size_probs: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if not 0.0 <= self.arrival_rate <= 1.0:
+            raise ValueError(f"arrival_rate={self.arrival_rate} outside "
+                             "[0, 1]")
+        if not self.size_choices:
+            raise ValueError("size_choices must be non-empty")
+        if any(s < 0 for s in self.size_choices):
+            raise ValueError(f"negative size in {self.size_choices}")
+        if self.size_probs is not None:
+            if len(self.size_probs) != len(self.size_choices):
+                raise ValueError(
+                    f"size_probs has {len(self.size_probs)} entries for "
+                    f"{len(self.size_choices)} choices")
+            if abs(sum(self.size_probs) - 1.0) > 1e-6:
+                raise ValueError(f"size_probs sum to "
+                                 f"{sum(self.size_probs)}, not 1")
+
+    def draw(self, key: jax.Array, ticks: int) -> Workload:
+        """Pre-draw ``ticks`` of traffic from one PRNG key."""
+        k_arr, k_size = jax.random.split(key)
+        shape = (ticks, self.n_clients)
+        arrived = jax.random.uniform(k_arr, shape) < self.arrival_rate
+        choices = jnp.asarray(self.size_choices, jnp.int32)
+        if self.size_probs is None:
+            idx = jax.random.randint(k_size, shape, 0, len(choices))
+        else:
+            logits = jnp.log(jnp.asarray(self.size_probs))
+            idx = jax.random.categorical(k_size, logits, shape=shape)
+        sizes = jnp.where(arrived, choices[idx], 0).astype(jnp.int32)
+        return Workload(arrived, sizes)

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.engine as eng
+from repro.engine import merge as M
+from repro.engine import sharded as SH
 from repro.core import jaxsim
 from repro.dissem import init_dissem
 
@@ -40,9 +41,9 @@ def _trees_equal(a, b):
 
 def test_pre_stable_gated_tick_is_bit_identical():
     acks, votes = _rand_traffic(1, seed=1)
-    st0 = eng.init_sharded(G, W, D, S)
-    s_ref, out_ref = eng.sharded_tick(st0, acks[0], votes[0], **KW)
-    s_gat, d, out_gat = eng.gated_tick(
+    st0 = SH.init_sharded(G, W, D, S)
+    s_ref, out_ref = SH.sharded_tick(st0, acks[0], votes[0], **KW)
+    s_gat, d, out_gat = SH.gated_tick(
         st0, init_dissem(G, W, D, pre_stable=True), acks[0],
         _zero_holds(1)[0], votes[0], stab_majority=MAJ_D, **KW)
     assert _trees_equal(s_ref, s_gat)
@@ -55,13 +56,13 @@ def test_pre_stable_gated_tick_is_bit_identical():
 def test_pre_stable_merged_run_is_bit_identical():
     T = 8
     acks, votes = _rand_traffic(T, seed=2)
-    slot_ids = eng.sharded.default_slot_ids(G, W)
-    s1, m1, mg1, c1, cc1 = eng.run_sharded_ticks_merged(
-        eng.init_sharded(G, W, D, S), eng.init_merge(G, T * 4),
+    slot_ids = SH.default_slot_ids(G, W)
+    s1, m1, mg1, c1, cc1 = SH.run_sharded_ticks_merged(
+        SH.init_sharded(G, W, D, S), M.init_merge(G, T * 4),
         acks, votes, slot_ids, **KW)
-    s2, d2, m2, mg2, c2, cc2 = eng.run_gated_ticks_merged(
-        eng.init_sharded(G, W, D, S), init_dissem(G, W, D, pre_stable=True),
-        eng.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
+    s2, d2, m2, mg2, c2, cc2 = SH.run_gated_ticks_merged(
+        SH.init_sharded(G, W, D, S), init_dissem(G, W, D, pre_stable=True),
+        M.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
         stab_majority=MAJ_D, **KW)
     assert _trees_equal(s1, s2)
     assert _trees_equal(m1, m2)
@@ -75,10 +76,10 @@ def test_unstable_ids_never_commit():
     T = 6
     acks, votes = _rand_traffic(T, seed=3)
     votes = jnp.full_like(votes, (1 << S) - 1)
-    slot_ids = eng.sharded.default_slot_ids(G, W)
-    s, d, ms, mg, cnt, committed = eng.run_gated_ticks_merged(
-        eng.init_sharded(G, W, D, S), init_dissem(G, W, D),
-        eng.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
+    slot_ids = SH.default_slot_ids(G, W)
+    s, d, ms, mg, cnt, committed = SH.run_gated_ticks_merged(
+        SH.init_sharded(G, W, D, S), init_dissem(G, W, D),
+        M.init_merge(G, T * 4), acks, _zero_holds(T), votes, slot_ids,
         stab_majority=MAJ_D, **KW)
     assert not bool(s.decided.any())
     assert int(committed) == 0
@@ -93,8 +94,8 @@ def test_partial_stability_gates_exactly_the_unstable_slots():
     votes = jnp.full_like(votes, (1 << S) - 1)
     holds = np.zeros((G, W, jaxsim._words(D)), np.uint32)
     holds[:, ::2] = (1 << D) - 1
-    st, d, out = eng.gated_tick(
-        eng.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
+    st, d, out = SH.gated_tick(
+        SH.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
         jnp.asarray(holds), votes[0], stab_majority=MAJ_D, **KW)
     dec = np.asarray(st.decided)
     stable = np.asarray(d.stable)
@@ -110,8 +111,8 @@ def test_same_tick_stabilize_then_vote_counts():
     acks = jnp.full_like(acks, (1 << D) - 1)
     votes = jnp.full_like(votes, (1 << S) - 1)
     holds = jnp.full((G, W, jaxsim._words(D)), (1 << D) - 1, jnp.uint32)
-    st, d, out = eng.gated_tick(
-        eng.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
+    st, d, out = SH.gated_tick(
+        SH.init_sharded(G, W, D, S), init_dissem(G, W, D), acks[0],
         holds, votes[0], stab_majority=MAJ_D,
         **dict(KW, order_budget=None))
     assert bool(d.stable.all())
@@ -129,13 +130,13 @@ def test_recycled_pre_stable_is_bit_identical():
     sat_a = jnp.full((T, G, W, wa), (1 << D) - 1, jnp.uint32)
     sat_v = jnp.full((T, G, W, wv), (1 << S) - 1, jnp.uint32)
     rkw = dict(**KW, watermark=8, id_stride=stride)
-    r, rm, rmg, rc, rcc = eng.run_recycled_ticks_merged(
-        eng.init_recycled(G, W, D, S, id_stride=stride),
-        eng.init_merge(G, T * 4), sat_a, sat_v, **rkw)
-    g, gm, gmg, gc, gcc = eng.run_gated_recycled_ticks_merged(
-        eng.init_gated_recycled(G, W, D, S, id_stride=stride,
+    r, rm, rmg, rc, rcc = SH.run_recycled_ticks_merged(
+        SH.init_recycled(G, W, D, S, id_stride=stride),
+        M.init_merge(G, T * 4), sat_a, sat_v, **rkw)
+    g, gm, gmg, gc, gcc = SH.run_gated_recycled_ticks_merged(
+        SH.init_gated_recycled(G, W, D, S, id_stride=stride,
                                 pre_stable=True),
-        eng.init_merge(G, T * 4), sat_a, _zero_holds(T), sat_v,
+        M.init_merge(G, T * 4), sat_a, _zero_holds(T), sat_v,
         stab_majority=MAJ_D, fresh_stable=True, **rkw)
     assert _trees_equal(r, g.rs)
     assert _trees_equal(rm, gm)
@@ -155,12 +156,12 @@ def test_recycled_saturated_holds_match_ungated_throughput():
     sat_v = jnp.full((T, G, W, wv), (1 << S) - 1, jnp.uint32)
     sat_h = jnp.full((T, G, W, wa), (1 << D) - 1, jnp.uint32)
     rkw = dict(**KW, watermark=8, id_stride=stride)
-    r, rm, rmg, rc, rcc = eng.run_recycled_ticks_merged(
-        eng.init_recycled(G, W, D, S, id_stride=stride),
-        eng.init_merge(G, T * 4), sat_a, sat_v, **rkw)
-    g, gm, gmg, gc, gcc = eng.run_gated_recycled_ticks_merged(
-        eng.init_gated_recycled(G, W, D, S, id_stride=stride),
-        eng.init_merge(G, T * 4), sat_a, sat_h, sat_v,
+    r, rm, rmg, rc, rcc = SH.run_recycled_ticks_merged(
+        SH.init_recycled(G, W, D, S, id_stride=stride),
+        M.init_merge(G, T * 4), sat_a, sat_v, **rkw)
+    g, gm, gmg, gc, gcc = SH.run_gated_recycled_ticks_merged(
+        SH.init_gated_recycled(G, W, D, S, id_stride=stride),
+        M.init_merge(G, T * 4), sat_a, sat_h, sat_v,
         stab_majority=MAJ_D, **rkw)
     assert int(rc) == int(gc) and int(rcc) == int(gcc)
     assert (np.asarray(rmg)[:int(rc)] == np.asarray(gmg)[:int(gc)]).all()
@@ -171,15 +172,15 @@ def test_recycle_releases_dissemination_state():
     tail is born with empty holds and unstable flags while surviving
     slots keep theirs — one shared compaction plan moves both windows."""
     stride = 10_000
-    gs = eng.init_gated_recycled(1, 8, D, S, id_stride=stride)
+    gs = SH.init_gated_recycled(1, 8, D, S, id_stride=stride)
     wa, wv = jaxsim._words(D), jaxsim._words(S)
     sat_a = jnp.full((1, 8, wa), (1 << D) - 1, jnp.uint32)
     sat_v = jnp.full((1, 8, wv), (1 << S) - 1, jnp.uint32)
     # stabilize + decide only slots 0..3 (the contiguous decided prefix)
     holds = np.zeros((1, 8, wa), np.uint32)
     holds[:, :4] = (1 << D) - 1
-    ms = eng.init_merge(1, 64)
-    gs, ms, out = eng.gated_recycled_tick_merged(
+    ms = M.init_merge(1, 64)
+    gs, ms, out = SH.gated_recycled_tick_merged(
         gs, ms, sat_a, jnp.asarray(holds), sat_v, stab_majority=MAJ_D,
         watermark=8, id_stride=stride, **KW)
     assert int(np.asarray(out["n_retired"])[0]) == 4
@@ -192,7 +193,7 @@ def test_recycle_releases_dissemination_state():
     # now stabilize the survivors only: positions 0..3 hold old live ids
     holds2 = np.zeros((1, 8, wa), np.uint32)
     holds2[:, :4] = (1 << D) - 1
-    gs, ms, out = eng.gated_recycled_tick_merged(
+    gs, ms, out = SH.gated_recycled_tick_merged(
         gs, ms, sat_a, jnp.asarray(holds2), sat_v, stab_majority=MAJ_D,
         watermark=0, id_stride=stride, **KW)
     assert np.asarray(gs.d.stable)[0, :4].all()

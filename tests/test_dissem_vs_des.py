@@ -21,7 +21,8 @@ import numpy as np
 import pytest
 from test_engine_vs_des import NOOP, group_instance_streams
 
-import repro.engine as eng
+from repro.engine import merge as M
+from repro.engine import sharded as S
 from repro.core.htpaxos import HTConfig, HTPaxosSim
 from repro.dissem import init_dissem, run_stability_ticks
 from repro.engine import router
@@ -140,9 +141,9 @@ def test_gated_engine_matches_des_learners_end_to_end(G):
                 k += 1
     votes = np.full((T, G, W, 1), 0xFFFFFFFF, np.uint32)
 
-    st, d, ms, merged, cnt, committed = eng.run_gated_ticks_merged(
-        eng.init_sharded(G, W, N_DISS, 3), init_dissem(G, W, N_DISS),
-        eng.init_merge(G, max(T, 1)), jnp.asarray(acks),
+    st, d, ms, merged, cnt, committed = S.run_gated_ticks_merged(
+        S.init_sharded(G, W, N_DISS, 3), init_dissem(G, W, N_DISS),
+        M.init_merge(G, max(T, 1)), jnp.asarray(acks),
         jnp.asarray(holds), jnp.asarray(votes), jnp.asarray(slot_ids),
         diss_majority=MAJ, seq_majority=2, stab_majority=MAJ,
         order_budget=1)

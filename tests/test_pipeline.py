@@ -1,0 +1,357 @@
+"""repro.pipeline unit & property tests: workload determinism, the
+vectorized batcher's equivalence with the host batcher family, the
+jit admission path vs its numpy twin, DES byte-budget batching, and
+the benchmark CLI's unknown-name handling (ride-along bugfix)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.network import ID_BYTES  # noqa: E402
+from repro.dissem.batcher import (BatchAccumulator,  # noqa: E402
+                                  EMPTY_BATCH_BYTES, batch_wire_sizes,
+                                  plan_batches)
+from repro.engine.api import (EngineConfig, GatingConfig,  # noqa: E402
+                              RecyclingConfig)
+from repro.pipeline import (PipelineConfig, Workload,  # noqa: E402
+                            WorkloadModel, build_route_table, committed,
+                            decode_merged, init_batch_state, init_pipeline,
+                            pipeline_tick_jit, plan_admissions,
+                            run_pipeline, tick_flushes)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# workload
+# ---------------------------------------------------------------------------
+
+def test_workload_model_deterministic_under_fixed_key():
+    m = WorkloadModel(n_clients=9, arrival_rate=0.4,
+                      size_choices=(128, 512, 2048),
+                      size_probs=(0.5, 0.25, 0.25))
+    a = m.draw(jax.random.PRNGKey(7), 50)
+    b = m.draw(jax.random.PRNGKey(7), 50)
+    assert np.array_equal(np.asarray(a.arrived), np.asarray(b.arrived))
+    assert np.array_equal(np.asarray(a.sizes), np.asarray(b.sizes))
+    c = m.draw(jax.random.PRNGKey(8), 50)
+    assert not np.array_equal(np.asarray(a.arrived), np.asarray(c.arrived))
+    # sizes are zero exactly off the arrival mask, drawn from choices on it
+    arr, sz = np.asarray(a.arrived), np.asarray(a.sizes)
+    assert (sz[~arr] == 0).all()
+    assert np.isin(sz[arr], m.size_choices).all()
+    assert 0 < a.n_requests < 50 * 9
+
+
+def test_workload_schedule_round_trip():
+    events = [(0, 2, 100), (3, 0, 50), (3, 4, 0), (9, 2, 777)]
+    wl = Workload.from_schedule(events, ticks=10, n_clients=5)
+    assert wl.schedule() == sorted(events)
+    assert wl.n_requests == 4 and wl.total_bytes == 927
+    wl2 = Workload.from_schedule(wl.schedule(), ticks=10, n_clients=5)
+    assert np.array_equal(np.asarray(wl.arrived), np.asarray(wl2.arrived))
+    assert np.array_equal(np.asarray(wl.sizes), np.asarray(wl2.sizes))
+
+
+@pytest.mark.parametrize("events,err", [
+    ([(10, 0, 1)], "tick"),
+    ([(0, 5, 1)], "client"),
+    ([(0, 0, 1), (0, 0, 2)], "duplicate"),
+    ([(0, 0, -1)], "negative"),
+])
+def test_workload_from_schedule_rejects(events, err):
+    with pytest.raises(ValueError, match=err):
+        Workload.from_schedule(events, ticks=10, n_clients=5)
+
+
+@pytest.mark.parametrize("kw,err", [
+    (dict(n_clients=0, arrival_rate=0.5), "n_clients"),
+    (dict(n_clients=1, arrival_rate=1.5), "arrival_rate"),
+    (dict(n_clients=1, arrival_rate=0.5, size_choices=()), "size_choices"),
+    (dict(n_clients=1, arrival_rate=0.5, size_choices=(-1,)), "negative"),
+    (dict(n_clients=1, arrival_rate=0.5, size_choices=(1, 2),
+          size_probs=(1.0,)), "size_probs"),
+    (dict(n_clients=1, arrival_rate=0.5, size_choices=(1, 2),
+          size_probs=(0.9, 0.9)), "sum"),
+])
+def test_workload_model_rejects(kw, err):
+    with pytest.raises(ValueError, match=err):
+        WorkloadModel(**kw)
+
+
+# ---------------------------------------------------------------------------
+# vectorized batcher ≡ host batcher family
+# ---------------------------------------------------------------------------
+
+def _stream_through_vbatch(size_stream, budget, max_requests,
+                           slots_per_tick=4):
+    """Feed a size stream through tick_flushes (one lane), tail-flush
+    OFF so the lane behaves as one endless BatchAccumulator; return each
+    request's assigned batch index."""
+    state = init_batch_state(1)
+    req_seq = []
+    i = 0
+    while i < len(size_stream):
+        chunk = size_stream[i:i + slots_per_tick]
+        sizes = np.zeros((1, slots_per_tick), np.int32)
+        valid = np.zeros((1, slots_per_tick), bool)
+        sizes[0, :len(chunk)] = chunk
+        valid[0, :len(chunk)] = True
+        state, fl = tick_flushes(
+            state, jnp.asarray(sizes), jnp.asarray(valid),
+            budget_bytes=budget, max_requests=max_requests,
+            flush_tail=False)
+        req_seq += np.asarray(fl.req_seq)[0, :len(chunk)].tolist()
+        i += slots_per_tick
+    return req_seq
+
+
+@given(sizes=st.lists(st.integers(min_value=0, max_value=3000),
+                      min_size=1, max_size=60),
+       budget=st.integers(min_value=EMPTY_BATCH_BYTES + ID_BYTES + 1,
+                          max_value=4000),
+       cap=st.sampled_from([None, 1, 3, 7]))
+@settings(max_examples=40, deadline=None)
+def test_vbatch_assignment_equals_plan_batches(sizes, budget, cap):
+    plan = plan_batches(sizes, budget_bytes=budget, max_requests=cap)
+    got = _stream_through_vbatch(sizes, budget, cap)
+    assert got == plan.tolist()
+
+
+@given(sizes=st.lists(st.integers(min_value=0, max_value=3000),
+                      min_size=1, max_size=40),
+       budget=st.integers(min_value=EMPTY_BATCH_BYTES + ID_BYTES + 1,
+                          max_value=4000))
+@settings(max_examples=40, deadline=None)
+def test_vbatch_tail_flush_bytes_equal_accumulator(sizes, budget):
+    """One tick with tail flush = BatchAccumulator add* + flush: same
+    batch count, same per-batch wire bytes and request counts."""
+    acc = BatchAccumulator(budget)
+    acc_batches = []
+    for s in sizes:
+        out = acc.add(s)
+        if out is not None:
+            acc_batches.append(out)
+    out = acc.flush()
+    if out is not None:
+        acc_batches.append(out)
+
+    K = len(sizes)
+    state = init_batch_state(1)
+    state, fl = tick_flushes(
+        state, jnp.asarray([sizes], jnp.int32),
+        jnp.ones((1, K), bool), budget_bytes=budget)
+    valid = np.asarray(fl.valid)[0]
+    got_counts = np.asarray(fl.count)[0][valid].tolist()
+    got_bytes = np.asarray(fl.bytes)[0][valid].tolist()
+    assert got_counts == [len(b) for b in acc_batches]
+    assert got_bytes == [EMPTY_BATCH_BYTES + sum(ID_BYTES + s for s in b)
+                         for b in acc_batches]
+    # lane state fully reset after the tail flush
+    assert int(state.count[0]) == 0
+    assert int(state.used[0]) == EMPTY_BATCH_BYTES
+    assert int(state.seq[0]) == len(acc_batches)
+
+
+def test_vbatch_oversized_request_gets_own_batch():
+    budget = EMPTY_BATCH_BYTES + ID_BYTES + 100
+    sizes = [50, 5000, 50]      # middle request alone exceeds the budget
+    plan = plan_batches(sizes, budget_bytes=budget)
+    assert plan.tolist() == [0, 1, 2]
+    assert _stream_through_vbatch(sizes, budget, None) == [0, 1, 2]
+    wire = batch_wire_sizes(sizes, plan)
+    assert wire[1] == EMPTY_BATCH_BYTES + ID_BYTES + 5000
+
+
+def test_vbatch_rejects_headerless_budget():
+    with pytest.raises(ValueError, match="budget"):
+        tick_flushes(init_batch_state(1),
+                     jnp.zeros((1, 2), jnp.int32), jnp.ones((1, 2), bool),
+                     budget_bytes=EMPTY_BATCH_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# closed pipeline: config validation + jit admission vs numpy twin
+# ---------------------------------------------------------------------------
+
+def gated_cfg(G=2, D=5, **over):
+    kw = dict(
+        engine=EngineConfig(
+            groups=G, window=16, n_diss=D, n_seq=3, order_budget=4,
+            merge_capacity=G * 256,
+            recycling=RecyclingConfig(watermark=8, id_stride=4096),
+            gating=GatingConfig()),
+        n_clients=10, budget_bytes=2500, capacity=128, seq_capacity=64)
+    kw.update(over)
+    return PipelineConfig(**kw)
+
+
+@pytest.mark.parametrize("over,err", [
+    (dict(engine=EngineConfig(groups=2, window=16, n_diss=5, n_seq=3,
+                              order_budget=4, merge_capacity=64)),
+     "gated"),
+    (dict(n_clients=0), "n_clients"),
+    (dict(budget_bytes=EMPTY_BATCH_BYTES), "budget_bytes"),
+    (dict(max_requests=0), "max_requests"),
+    (dict(ack_lag=(1, 2)), "ack_lag"),
+    (dict(hold_lag=(-1, 0, 0, 0, 0)), "hold_lag"),
+    (dict(vote_lag=(0,) * 4), "vote_lag"),
+    (dict(capacity=8), "capacity"),
+    (dict(capacity=8192), "id stride"),
+    (dict(seq_capacity=0), "seq_capacity"),
+])
+def test_pipeline_config_rejects(over, err):
+    with pytest.raises(ValueError, match=err):
+        gated_cfg(**over)
+
+
+def test_pipeline_config_lag_defaults():
+    cfg = gated_cfg()
+    assert cfg.ack_lag == (0,) * 5
+    assert cfg.hold_lag == (0,) * 5
+    assert cfg.vote_lag == (0,) * 3
+    assert cfg.n_lanes == 5 and cfg.lane_slots == 2
+    assert cfg.id_stride == 4096
+
+
+def test_admission_matches_numpy_twin_and_drains():
+    pcfg = gated_cfg(ack_lag=(0, 1, 1, 2, 2), hold_lag=(0, 0, 1, 1, 2),
+                     vote_lag=(1, 1, 2))
+    wl = WorkloadModel(n_clients=10, arrival_rate=0.5,
+                       size_choices=(200, 900, 1800)).draw(
+                           jax.random.PRNGKey(3), 30)
+    rt = jnp.asarray(build_route_table(pcfg))
+    st = init_pipeline(pcfg)
+    st, outs = run_pipeline(pcfg, st, wl.arrived, wl.sizes, rt)
+    ea = jnp.zeros((10,), bool)
+    es = jnp.zeros((10,), jnp.int32)
+    for _ in range(24):
+        st, _ = pipeline_tick_jit(pcfg, st, ea, es, rt)
+    assert not bool(st.overflowed)
+    assert int(outs["dropped"].sum()) == 0
+
+    adm = plan_admissions(pcfg, wl, np.asarray(rt))
+    n_twin = sum(len(v) for v in adm.values())
+    assert n_twin == int(st.admit_count.sum()) > 0
+    codes = np.asarray(st.bid_code)
+    ticks = np.asarray(st.admit_tick)
+    for g, rows in adm.items():
+        assert int(st.admit_count[g]) == len(rows)
+        for r in rows:
+            assert codes[g, r["rank"]] == \
+                r["lane"] * pcfg.seq_capacity + r["seq"]
+            assert ticks[g, r["rank"]] == r["tick"]
+    # every admitted batch is ordered exactly once after the drain
+    merged, count, com = committed(pcfg, st)
+    assert int(com) == n_twin
+    bids = decode_merged(pcfg, st, merged, com)
+    assert len(bids) == n_twin and len(set(bids)) == n_twin
+    # per-lane flush accounting matches the twin's accumulator totals
+    assert int(st.n_flushed.sum()) == n_twin
+
+
+def test_pipeline_tick_reports_flush_and_admit_counts():
+    pcfg = gated_cfg()
+    rt = jnp.asarray(build_route_table(pcfg))
+    st = init_pipeline(pcfg)
+    arrived = jnp.asarray([True] * 5 + [False] * 5)
+    sizes = jnp.where(arrived, 500, 0).astype(jnp.int32)
+    st, out = pipeline_tick_jit(pcfg, st, arrived, sizes, rt)
+    assert int(out["flushed"]) == 5         # one tail batch per lane
+    assert int(out["admitted"]) == 5
+    assert not bool(out["overflowed"])
+
+
+# ---------------------------------------------------------------------------
+# DES byte-budget batching (HTConfig.batch_budget_bytes)
+# ---------------------------------------------------------------------------
+
+def test_des_budget_batching_spaced_arrivals_flush_singly():
+    """Linger-0 semantics under the byte budget: requests spaced apart
+    in time each flush as their own batch (the linger timer drains the
+    tail every intake instant), regardless of how the one-shot greedy
+    plan would pack them."""
+    from repro.core.htpaxos import HTConfig, HTPaxosSim
+
+    sizes = [100, 900, 900, 900, 30, 2000, 10, 10, 10, 10, 1500, 700]
+    budget = 2200
+    # one request every 5 time units, all from client 0 → disseminator d0
+    schedule = tuple((5.0 * i, 0, s) for i, s in enumerate(sizes))
+    cfg = HTConfig(n_diss=3, n_seq=3, n_clients=1,
+                   batch_budget_bytes=budget,
+                   random_client_target=False,
+                   workload_schedule=schedule)
+    sim = HTPaxosSim(cfg, requests_per_client=0)
+    sim.run(until=5.0 * len(sizes) + 30)
+    d0 = sim.agents["d0"]
+    # rid (c0, i) carries sizes[i]; group rids by batch
+    got = [[rid[1] for rid in d0.own_batches[("d0", b)]]
+           for b in range(d0.next_batch)]
+    assert got == [[i] for i in range(len(sizes))]
+
+
+def test_des_budget_batching_overflow_within_instant():
+    """Several same-instant requests at one disseminator: overflow
+    closures split them exactly like BatchAccumulator, and batch wire
+    sizes reflect the true per-request payloads."""
+    from repro.core.htpaxos import HTConfig, HTPaxosSim
+
+    sizes = [900, 900, 900, 30, 2000, 10, 10, 1500]
+    budget = 2200
+    schedule = tuple((1.0, 0, s) for s in sizes)   # all at t=1, client 0
+    cfg = HTConfig(n_diss=3, n_seq=3, n_clients=1,
+                   batch_budget_bytes=budget,
+                   random_client_target=False,
+                   workload_schedule=schedule)
+    sim = HTPaxosSim(cfg, requests_per_client=0)
+    sim.run(until=40)
+    d0 = sim.agents["d0"]
+    plan = plan_batches(sizes, budget_bytes=budget)
+    want = [[i for i, b in enumerate(plan) if b == k]
+            for k in range(int(plan.max()) + 1)]
+    got = [[rid[1] for rid in d0.own_batches[("d0", b)]]
+           for b in range(d0.next_batch)]
+    assert got == want
+    wire = batch_wire_sizes(sizes, plan)
+    for k in range(d0.next_batch):
+        assert d0.bid_nbytes[("d0", k)] == wire[k]
+    # every batch was ordered and executed exactly once
+    assert [b for b in d0.executed_bid_order] == \
+        [("d0", k) for k in range(d0.next_batch)]
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --only (ride-along bugfix)
+# ---------------------------------------------------------------------------
+
+def _run_bench_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+
+
+def test_bench_only_unknown_name_fails_with_valid_names():
+    r = _run_bench_cli("--only", "definitely_not_a_bench")
+    assert r.returncode == 2
+    assert "definitely_not_a_bench" in r.stderr
+    # the error enumerates the valid names so the caller can self-correct
+    for name in ("engine", "pipeline", "dissem", "membership"):
+        assert name in r.stderr
+
+
+def test_bench_only_lists_are_in_sync_with_registry():
+    r = _run_bench_cli("--list")
+    assert r.returncode == 0
+    assert "pipeline" in r.stdout
