@@ -31,6 +31,10 @@ figure-level quantity the paper plots).
           stage-isolated gated engine on the same config, plus per-lane
           wire bytes against the §5.5 partitioned closed forms —
           written to BENCH_pipeline.json
+  adaptive  per-group adaptive tick batching (repro.engine.adaptive):
+          merged ids/s vs lock-step ticking under a skewed workload
+          (one slow group) and a uniform control, bit-identical merged
+          output asserted — written to BENCH_adaptive_batching.json
   kernels interpret-mode kernel sanity timings
 
 Run everything (``python benchmarks/run.py``), one bench by its short
@@ -704,6 +708,131 @@ def bench_dissem() -> None:
     _write_bench_json("BENCH_sharded_dissemination.json", rows)
 
 
+def bench_adaptive() -> None:
+    """Per-group adaptive tick batching (repro.engine.adaptive): merged
+    learner ids/second under a deliberately skewed workload (one slow
+    group with a deep traffic queue) vs lock-step one-tile-per-tick
+    ticking, on bit-identical merged output.
+
+    Skewed scenario: group 0 holds K× the traffic tiles of the fast
+    groups (a trickle — each tile stabilizes one new slot), so lock-step
+    needs T0 host dispatches while the adaptive engine absorbs K tiles
+    per merged pass for the lagging group (~T0/K dispatches, one wide
+    merge append per pass). Uniform scenario: equal queues → lag spread
+    0 → R=1 everywhere, i.e. the adaptive pass degenerates to lock-step
+    and must not regress. Both scenarios assert the merged learner
+    prefix is bit-identical between the two schedules before any rate is
+    reported — the speedup is scheduling-only, never reordering.
+    Written to BENCH_adaptive_batching.json.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import adaptive as ad
+    from repro.engine import api
+
+    G, K, B = 4, 4, 4
+    T0 = 64                      # slow group's queue depth (tiles)
+    TF = T0 // K                 # fast groups' queue depth
+    W = TF * B                   # fast groups fill the window exactly
+    D, SEQ = 20, 8
+    wd, ws = (D + 31) // 32, (SEQ + 31) // 32
+    rows = []
+
+    def make_traffic(lens):
+        """[T0, G, W, words] pre-packed tiles; group g's tile t beyond
+        lens[g] is zero. Slow tiles saturate one slot, fast tiles a
+        B-slot stripe — every absorbed slot is assignable (and votable)
+        the same round, so the queue depth IS the lag."""
+        acks = np.zeros((T0, G, W, wd), np.uint32)
+        votes = np.zeros((T0, G, W, ws), np.uint32)
+        for g in range(G):
+            for t in range(lens[g]):
+                lo, hi = (t, t + 1) if lens[g] == T0 else (t * B, (t + 1) * B)
+                acks[t, g, lo:hi] = 0xFFFFFFFF
+                votes[t, g, lo:hi] = 0xFFFFFFFF
+        return jnp.asarray(acks), jnp.asarray(votes)
+
+    for scenario, lens in (("skew", [T0] + [TF] * (G - 1)),
+                           ("uniform", [TF] * G)):
+        cfg = api.EngineConfig(
+            groups=G, window=W, n_diss=D, n_seq=SEQ, order_budget=B,
+            merge_capacity=4096,
+            adaptive=ad.AdaptiveConfig(max_tiles_per_tick=K,
+                                       policy="backlog",
+                                       queue_capacity=T0))
+        acks, votes = make_traffic(lens)
+        T_lock = max(lens) + 2           # +2 zero ticks: full drain
+        zeros_a = jnp.zeros((G, W, wd), jnp.uint32)
+        zeros_v = jnp.zeros((G, W, ws), jnp.uint32)
+        st0 = api.create_state(cfg)
+        q0 = ad.queue_from_arrays(cfg, acks, votes,
+                                  lengths=jnp.asarray(lens, jnp.int32))
+
+        # probe the pass count to quiescence (R==0 ⇔ queues empty and no
+        # assignable backlog); the policy is deterministic so the count
+        # is stable across the timed repetitions
+        P_adapt, st_p, q_p = 0, st0, q0
+        while P_adapt < 2 * T_lock:
+            st_p, q_p, pout = ad.adaptive_pass_jit(cfg, st_p, q_p)
+            P_adapt += 1
+            if int(pout["rounds"]) == 0:
+                break
+
+        def run_lockstep():
+            st = st0
+            for t in range(T_lock):
+                a = acks[t] if t < T0 else zeros_a
+                v = votes[t] if t < T0 else zeros_v
+                st, _ = api._tick_jit(cfg, st, a, v, None)
+            m, c, com = api.committed_prefix(cfg, st)
+            return st, m, jax.block_until_ready(c), com
+
+        def run_adaptive():
+            st, q = st0, q0
+            for _ in range(P_adapt):
+                st, q, _ = ad.adaptive_pass_jit(cfg, st, q)
+            m, c, com = api.committed_prefix(cfg, st)
+            return st, q, m, jax.block_until_ready(c), com
+
+        # exactness first: the rate comparison is only meaningful on
+        # bit-identical merged output
+        _, m_l, c_l, com_l = run_lockstep()
+        st_a, q_a, m_a, c_a, com_a = run_adaptive()
+        assert int(jnp.sum(q_a.tail - q_a.head)) == 0, "queue not drained"
+        assert int(c_l) == int(c_a) == sum(
+            n * (1 if n == T0 else B) for n in lens)
+        assert np.array_equal(np.asarray(m_l)[:int(c_l)],
+                              np.asarray(m_a)[:int(c_a)]), scenario
+        assert int(com_l) == int(com_a)
+
+        ids = int(c_l)
+        us_l = _t(lambda: run_lockstep()[2], n=5)
+        us_a = _t(lambda: run_adaptive()[3], n=5)
+        rate_l, rate_a = ids / (us_l / 1e6), ids / (us_a / 1e6)
+        speedup = rate_a / rate_l
+        emit(f"adaptive/{scenario}/lockstep", us_l,
+             f"{rate_l:.0f} ids/s ({ids} ids, {T_lock} ticks)")
+        emit(f"adaptive/{scenario}/adaptive", us_a,
+             f"{rate_a:.0f} ids/s ({ids} ids, {P_adapt} passes, K={K}) "
+             f"{speedup:.2f}x vs lockstep")
+        target = 1.5 if scenario == "skew" else 0.95
+        rows.append({
+            "name": f"adaptive_batching/{scenario}", "us_per_call": us_a,
+            "us_lockstep": us_l, "ids_ordered": ids,
+            "ids_per_sec_adaptive": rate_a, "ids_per_sec_lockstep": rate_l,
+            "speedup_vs_lockstep": speedup, "G": G, "K": K,
+            "order_budget": B, "queue_depths": lens,
+            "ticks_lockstep": T_lock, "passes_adaptive": P_adapt,
+            "bit_identical": True, "target": target,
+            "target_met": speedup >= target,
+        })
+        # sanity floor (loose; the committed JSON records the real
+        # ratio + target_met for the docs table — CI machines vary)
+        if scenario == "skew":
+            assert speedup > 1.1, speedup
+    _write_bench_json("BENCH_adaptive_batching.json", rows)
+
+
 BENCHES = {
     "fig1": bench_fig1, "fig2": bench_fig2, "fig3": bench_fig3,
     "fig45": bench_fig45, "fig6": bench_fig6, "fig7": bench_fig7,
@@ -711,7 +840,7 @@ BENCHES = {
     "engine": bench_engine, "sharded_engine": bench_sharded_engine,
     "sustained_engine": bench_sustained_engine, "dissem": bench_dissem,
     "membership": bench_membership, "pipeline": bench_pipeline,
-    "kernels": bench_kernels,
+    "adaptive": bench_adaptive, "kernels": bench_kernels,
 }
 
 

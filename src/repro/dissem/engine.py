@@ -147,3 +147,16 @@ def dissem_admitted_mask(state: DissemState) -> jax.Array:
     to the new owner group so the stability gate never regresses, even if
     the ordering side has not seen an id-multicast for it yet."""
     return jnp.any(state.hold_bits != 0, axis=-1) | state.stable
+
+
+def unstable_backlog(state: DissemState) -> jax.Array:
+    """int32[G]: admitted-but-not-yet-stable slots per group.
+
+    The dissemination-side lag metric of ``repro.engine.adaptive``'s
+    ``"unstable"`` policy: slots that carry replication state (some
+    disseminator holds the batch) but have not crossed the stability
+    majority, so their phase-2b votes are still being masked by the gate
+    — a deep backlog here means the group's ordering output is about to
+    lag and it should absorb extra traffic tiles per merged pass."""
+    return jnp.sum(dissem_admitted_mask(state) & ~state.stable,
+                   axis=-1, dtype=jnp.int32)

@@ -60,6 +60,10 @@ _LAZY = {
     "reconfigure_gated_recycled": "epochs",
     "Engine": "api", "EngineConfig": "api", "EngineState": "api",
     "RecyclingConfig": "api", "GatingConfig": "api",
+    "AdaptiveConfig": "adaptive", "TrafficQueue": "adaptive",
+    "init_queue": "adaptive", "enqueue": "adaptive",
+    "queue_from_arrays": "adaptive", "adaptive_pass": "adaptive",
+    "run_adaptive": "adaptive", "subtick_pass": "adaptive",
 }
 
 # The four per-family function groups the api.Engine facade replaces.
@@ -108,7 +112,8 @@ __all__ = ["ROUTER_HASH_VERSION", "partition_ids", "route_id", "route_ids",
 
 
 def __getattr__(name):
-    modname = name if name in ("merge", "sharded", "api", "epochs") \
+    modname = name if name in ("merge", "sharded", "api", "epochs",
+                               "adaptive") \
         else _LAZY.get(name)
     if modname is None:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -52,9 +52,11 @@ import jax
 import jax.numpy as jnp
 
 from ..dissem.engine import DissemState, init_dissem
+from . import adaptive as adaptive_mod
 from . import epochs as epochs_mod
 from . import merge as merge_mod
 from . import sharded as sharded_mod
+from .adaptive import AdaptiveConfig
 from .epochs import EpochTable
 
 
@@ -116,6 +118,7 @@ class EngineConfig:
     recycling: RecyclingConfig | None = None
     gating: GatingConfig | None = None
     epochs: EpochTable | None = None
+    adaptive: AdaptiveConfig | None = None
 
     def __post_init__(self):
         def norm(field, value):
@@ -189,6 +192,11 @@ class EngineConfig:
                     f"[1, {part}]")
             norm("gating", GatingConfig(stab, part, bool(g.pre_stable),
                                         bool(g.fresh_stable)))
+        if self.adaptive is not None and \
+                not isinstance(self.adaptive, AdaptiveConfig):
+            raise ValueError(
+                f"EngineConfig.adaptive must be an AdaptiveConfig, got "
+                f"{type(self.adaptive).__name__}")
         if self.epochs is not None and self.epochs.n_rows != self.groups:
             raise ValueError(
                 f"EpochTable.n_rows={self.epochs.n_rows} must equal "
@@ -450,9 +458,13 @@ class Engine:
         self.cfg = cfg
         self.state = state
         self.epoch = int(epoch)
+        self.queue: adaptive_mod.TrafficQueue | None = None
 
     @classmethod
     def create(cls, cfg: EngineConfig, *, epoch: int = 0) -> "Engine":
+        """Build a fresh engine for ``cfg`` (family implied by which
+        sub-configs are present). ``epoch`` must index ``cfg.epochs``
+        when an :class:`EpochTable` is configured."""
         if cfg.epochs is not None and \
                 not 0 <= int(epoch) < cfg.epochs.n_epochs:
             raise ValueError(f"epoch {epoch} not in EpochTable "
@@ -460,35 +472,86 @@ class Engine:
         return cls(cfg, create_state(cfg), epoch=epoch)
 
     def tick(self, acks, votes, holds=None) -> dict:
+        """One engine step on pre-packed tiles — ``acks``
+        uint32[G, W, WORDS_diss], ``votes`` uint32[G, W, WORDS_seq],
+        ``holds`` uint32[G, W, WORDS_part] iff ``cfg.gating`` is set.
+        Recycled families also compact below the watermark; re-read
+        :attr:`slot_ids` afterwards (recycling remaps slots). Returns
+        the family tick's outputs (``assigned``, ``dropped``, ...)."""
         self.state, out = _tick_jit(self.cfg, self.state, acks, votes,
                                     holds)
         return out
 
     def run(self, acks_seq, votes_seq, holds_seq=None)\
             -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Scan-fused multi-tick run over [T, G, W, WORDS] tile
+        sequences → ``(merged, merged_count, committed_count)``.
+        Recycled families need position-uniform traffic inside a fused
+        run (id-addressed host loops must use :meth:`tick`)."""
         self.state, merged, count, committed = run(
             self.cfg, self.state, acks_seq, votes_seq, holds_seq)
         return merged, count, committed
 
     def recycle(self) -> jax.Array:
+        """Explicit watermark-gated compaction (recycled families):
+        retire each group's contiguous decided prefix, refill the tail
+        with fresh monotone ids. Returns retired-per-group int32[G]."""
         self.state, n = recycle(self.cfg, self.state)
         return n
 
     def reconfigure(self, new_epoch: int) -> dict:
+        """Drain-then-switch to ``new_epoch`` (requires ``cfg.epochs``).
+        Precondition: rows leaving the active set are drained
+        (``ValueError`` otherwise). Appends one aligned RECONFIG marker
+        round, seals removed rows, re-homes in-flight ids. Returns the
+        move report."""
         self.state, report = reconfigure(self.cfg, self.state,
                                          self.epoch, int(new_epoch))
         self.epoch = int(new_epoch)
         return report
 
     def committed(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """``(merged, merged_count, committed_count)`` for the current
+        state — ``merged[:committed_count]`` is the executable prefix
+        (phase-2b quorum reached; recycle-aware via retired bases)."""
         return committed_prefix(self.cfg, self.state)
+
+    # -- adaptive tick batching (cfg.adaptive) -------------------------------
+
+    def enqueue(self, acks, votes, holds=None, mask=None) -> None:
+        """Queue one pre-packed tile set per group for adaptive passes
+        (requires ``cfg.adaptive``; the queue is created lazily)."""
+        if self.cfg.adaptive is None:
+            raise ValueError("enqueue() needs EngineConfig.adaptive set")
+        if self.queue is None:
+            self.queue = adaptive_mod.init_queue(self.cfg)
+        self.queue = adaptive_mod.enqueue(self.queue, acks, votes,
+                                          holds=holds, mask=mask)
+
+    def adaptive_pass(self) -> dict:
+        """One adaptive merged pass over the queued traffic: lagging
+        groups consume up to ``cfg.adaptive.max_tiles_per_tick`` tiles,
+        caught-up groups one (or none, padded with SKIP rounds).
+        Returns the pass summary (``rounds``/``consumed``/``dropped``);
+        ``rounds == 0`` means the engine is fully drained."""
+        if self.cfg.adaptive is None:
+            raise ValueError(
+                "adaptive_pass() needs EngineConfig.adaptive set")
+        if self.queue is None:
+            self.queue = adaptive_mod.init_queue(self.cfg)
+        self.state, self.queue, out = adaptive_mod.adaptive_pass_jit(
+            self.cfg, self.state, self.queue)
+        return out
 
     @property
     def slot_ids(self) -> jax.Array:
+        """Live slot→id map int32[G, W] (mutable under recycling —
+        re-read between host-driven ticks)."""
         return slot_ids(self.state)
 
     @property
     def merge_state(self) -> merge_mod.MergeState:
+        """The round-robin merge logs (``merge.MergeState``)."""
         return self.state.merge
 
     def __repr__(self) -> str:

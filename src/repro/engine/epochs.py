@@ -102,9 +102,14 @@ class EpochTable:
 
     @property
     def n_epochs(self) -> int:
+        """Number of configured epochs (valid epoch ids are
+        ``0 .. n_epochs-1``)."""
         return len(self.active)
 
     def groups(self, epoch: int) -> tuple[int, ...]:
+        """The physical row indices active in ``epoch`` (each in
+        ``0 .. n_rows-1``; rows are only (de)activated, never created,
+        so jitted tick shapes are epoch-independent)."""
         return self.active[epoch]
 
 

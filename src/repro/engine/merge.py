@@ -51,6 +51,11 @@ class MergeState(NamedTuple):
 
 
 def init_merge(groups: int, capacity: int) -> MergeState:
+    """Fresh empty merge logs: ``logs`` int32[G, capacity] all PAD,
+    zero watermarks/overflow counters. Size ``capacity`` to the total
+    entries a run can append per group (ticks × max_entries for
+    lock-step runs; passes × K × max_entries under adaptive batching —
+    SKIP padding counts against capacity)."""
     return MergeState(
         logs=jnp.full((groups, capacity), PAD, jnp.int32),
         watermarks=jnp.zeros((groups,), jnp.int32),
@@ -163,6 +168,41 @@ def entries_from_assigned(assigned: jax.Array, slot_ids: jax.Array,
     dropped = jnp.sum(jnp.maximum(n_assigned - max_entries, 0),
                       dtype=jnp.int32)
     return entries, counts, dropped
+
+
+def round_entries(assigned: jax.Array, slot_ids: jax.Array,
+                  round_width: int)\
+        -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One *fixed-width* merge round per group (adaptive-batching accounting).
+
+    Same extraction as :func:`entries_from_assigned` — each group's newly
+    assigned ids in instance order, SKIP-padded — but every group's round
+    is exactly ``round_width`` entries wide regardless of what the other
+    groups assigned. ``repro.engine.adaptive`` appends one such round per
+    group per inner tick, so a group that absorbed k tiles this pass
+    appended k·round_width entries while every other group appended the
+    same number of (possibly all-SKIP) rounds: round r of group g always
+    holds what group g assigned at its r-th tick, which is what makes
+    uneven per-group tile consumption merge bit-identically to lock-step
+    ticking (cross-group order reduces to lexicographic
+    (tick, within-tick index, group) either way — SKIP padding is dropped
+    by :func:`merged_prefix` and never reorders real ids).
+
+    assigned: int32[G, W] (-1 = none this tick); slot_ids: int32[G, W].
+    Returns (entries int32[G, round_width], n_assigned int32[G],
+    dropped int32[G] — ids past ``round_width``, zero whenever
+    ``round_width ≥ order_budget``).
+    """
+    mask = assigned >= 0                                         # [G, W]
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1         # [G, W]
+    n_assigned = jnp.sum(mask, axis=1, dtype=jnp.int32)          # [G]
+    entries = jnp.full((assigned.shape[0], round_width), SKIP, jnp.int32)
+    entries = jax.vmap(
+        lambda e, p, m, ids: e.at[jnp.where(m, p, round_width)].set(
+            ids, mode="drop"))(entries, pos, mask,
+                               slot_ids.astype(jnp.int32))
+    dropped = jnp.maximum(n_assigned - round_width, 0)
+    return entries, n_assigned, dropped
 
 
 def committed_prefix_len(state: MergeState,

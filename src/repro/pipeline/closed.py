@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dissem.batcher import BatchAccumulator, EMPTY_BATCH_BYTES
+from ..engine import adaptive as adaptive_mod
 from ..engine import api
 from ..engine.api import EngineConfig, EngineState
 from ..engine.epochs import EpochTable, route_id_epoch
@@ -302,9 +303,19 @@ def pipeline_tick(cfg: PipelineConfig, state: PipelineState,
     # stage 3b: delivery tiles from admission ages (live slot→id map)
     acks, votes, holds = _lag_tiles(cfg, state)
 
-    # stage 4: gated ordering + merge, via the facade
-    estate, eout = api.tick(cfg.engine, state.engine, acks, votes,
-                            holds=holds)
+    # stage 4: gated ordering + merge, via the facade. With
+    # EngineConfig.adaptive set, the adaptive subtick variant re-absorbs
+    # the same tiles (idempotent OR) for up to K−1 extra masked
+    # assignment rounds, so a group whose undecided/unstable backlog has
+    # spread ahead of its peers drains at R × order_budget ids per
+    # pipeline tick — size merge_capacity for up to K·max_entries
+    # appended entries per tick instead of max_entries.
+    if cfg.engine.adaptive is not None:
+        estate, eout = adaptive_mod.subtick_pass(
+            cfg.engine, state.engine, acks, votes, holds=holds)
+    else:
+        estate, eout = api.tick(cfg.engine, state.engine, acks, votes,
+                                holds=holds)
     state = state._replace(engine=estate,
                            tick=state.tick + jnp.int32(1))
     out = {"flushed": fvalid.sum(dtype=jnp.int32),

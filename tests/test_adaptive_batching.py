@@ -1,0 +1,249 @@
+"""Adaptive tick batching (repro.engine.adaptive) exactness suite.
+
+The load-bearing property: for pre-loaded traffic queues, an adaptive
+run — whatever per-pass tile partition the lag policy induces (uniform
+round count R per pass, per-group consumption k_g = min(R, backlog_g),
+SKIP-padded fixed-width rounds) — produces a merged learner log
+bit-identical to lock-step one-tile-per-tick ticking, for all four
+engine families, including runs where the recycled families recycle
+mid-stream.  Exactness is only claimed at quiescence, so every lock-step
+reference below is drain-padded with zero ticks (the adaptive engine
+keeps ticking groups with assignable backlog after their queue empties;
+a truncated lock-step run would simply have ordered *less*, not
+differently).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.engine import adaptive as ad
+from repro.engine import api
+
+G, W, D, S, B = 3, 8, 5, 3, 2
+T0 = 10            # queue capacity / max per-group tile count
+E = W              # drain slack: zero ticks to empty assignable backlog
+FAMILIES = ("plain", "gated", "recycled", "gated_recycled")
+
+
+def make_cfg(fam, K=4, policy="backlog", thr=1):
+    kw = dict(groups=G, window=W, n_diss=D, n_seq=S, order_budget=B,
+              merge_capacity=512,
+              adaptive=ad.AdaptiveConfig(max_tiles_per_tick=K,
+                                         policy=policy, threshold=thr,
+                                         queue_capacity=T0))
+    if "recycled" in fam:
+        # low watermark so recycles fire mid-run in every scenario
+        kw["recycling"] = api.RecyclingConfig(watermark=W - 2,
+                                              id_stride=1 << 16)
+    if "gated" in fam:
+        kw["gating"] = api.GatingConfig()
+    return api.EngineConfig(**kw)
+
+
+def rand_traffic(cfg, lens, seed):
+    """[T0, G, W, words] random packed tiles, zero beyond each group's
+    true length ``lens[g]`` (the queue regime: group g has lens[g]
+    tiles)."""
+    rng = np.random.default_rng(seed)
+    wd = (D + 31) // 32
+    ws = (S + 31) // 32
+    gat = cfg.gating is not None
+    wp = ((cfg.gating.n_diss_partition + 31) // 32) if gat else 0
+
+    def mk(words, density):
+        a = rng.random((T0, G, W, words * 32)) < density
+        bits = np.zeros((T0, G, W, words), np.uint32)
+        for b in range(words * 32):
+            bits[..., b // 32] |= (a[..., b].astype(np.uint32) << (b % 32))
+        for g in range(G):
+            bits[lens[g]:, g] = 0
+        return jnp.asarray(bits)
+
+    acks = mk(wd, 0.25)
+    votes = mk(ws, 0.5)
+    holds = mk(wp, 0.3) if gat else None
+    return acks, votes, holds
+
+
+def pad(x, e=E):
+    if x is None:
+        return None
+    return jnp.concatenate([x, jnp.zeros((e,) + x.shape[1:], x.dtype)])
+
+
+def lockstep_reference(cfg, acks, votes, holds):
+    """Drain-padded fused lock-step run → (merged_prefix, committed)."""
+    st = api.create_state(cfg)
+    st, merged, cnt, com = api.run(cfg, st, pad(acks), pad(votes),
+                                   pad(holds))
+    return np.asarray(merged)[:int(cnt)], int(com)
+
+
+def adaptive_run(cfg, acks, votes, holds, lens):
+    st = api.create_state(cfg)
+    q = ad.queue_from_arrays(cfg, acks, votes, holds,
+                             lengths=jnp.asarray(lens, jnp.int32))
+    st, q, merged, cnt, com = ad.run_adaptive(cfg, st, q,
+                                              n_passes=T0 + E)
+    assert int(jnp.sum(q.tail - q.head)) == 0, "queue not drained"
+    return np.asarray(merged)[:int(cnt)], int(com)
+
+
+@pytest.mark.parametrize("fam", FAMILIES)
+def test_adaptive_bit_identical_all_families(fam):
+    """Fixed skewed scenario, every family: merged output and committed
+    count equal the drain-padded lock-step reference bit for bit."""
+    cfg = make_cfg(fam)
+    assert cfg.family == fam
+    lens = [T0, 3, 6]
+    acks, votes, holds = rand_traffic(cfg, lens, seed=0)
+    ref, com_ref = lockstep_reference(cfg, acks, votes, holds)
+    got, com = adaptive_run(cfg, acks, votes, holds, lens)
+    assert np.array_equal(ref, got)
+    assert com == com_ref
+    assert len(ref) > 0  # non-vacuous
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       fam=st.sampled_from(FAMILIES),
+       K=st.sampled_from([1, 2, 4]),
+       thr=st.sampled_from([1, 2]),
+       policy=st.sampled_from(ad.POLICIES),
+       lens=st.lists(st.integers(1, T0), min_size=G, max_size=G))
+def test_any_partition_bit_identical(seed, fam, K, thr, policy, lens):
+    """Property: any per-group tile partition of the same traffic —
+    whatever K / threshold / lag policy induce, including K=1 (pure
+    lock-step) and mid-run recycles — yields a bit-identical merged
+    prefix and committed count."""
+    cfg = make_cfg(fam, K=K, policy=policy, thr=thr)
+    acks, votes, holds = rand_traffic(cfg, lens, seed=seed)
+    ref, com_ref = lockstep_reference(cfg, acks, votes, holds)
+    got, com = adaptive_run(cfg, acks, votes, holds, lens)
+    assert np.array_equal(ref, got)
+    assert com == com_ref
+
+
+def test_plan_rounds_policy():
+    """R scales with the lag spread, caps at K, degenerates to 1 under
+    uniform load, and is 0 only at quiescence; k = min(R, backlog)."""
+    cfg = make_cfg("plain", K=4, thr=1)
+    st = api.create_state(cfg)
+    acks, votes, _ = rand_traffic(cfg, [T0, 2, 2], seed=1)
+    q = ad.queue_from_arrays(cfg, acks, votes,
+                             lengths=jnp.asarray([T0, 2, 2], jnp.int32))
+    R, k = ad.plan_rounds(cfg, st, q)
+    assert int(R) == 4                      # spread 8 ≥ K-1 → capped
+    assert list(np.asarray(k)) == [4, 2, 2]  # k_g = min(R, backlog_g)
+
+    q_u = ad.queue_from_arrays(cfg, acks, votes,
+                               lengths=jnp.asarray([3, 3, 3], jnp.int32))
+    R_u, k_u = ad.plan_rounds(cfg, st, q_u)
+    assert int(R_u) == 1                    # no spread → lock-step
+    assert list(np.asarray(k_u)) == [1, 1, 1]
+
+    q_e = ad.init_queue(cfg)
+    R_e, _ = ad.plan_rounds(cfg, st, q_e)
+    assert int(R_e) == 0                    # empty + nothing assignable
+
+
+def test_queue_enqueue_backlog_dropped():
+    cfg = make_cfg("plain")
+    q = ad.init_queue(cfg, capacity=2)
+    wd, ws = (D + 31) // 32, (S + 31) // 32
+    a = jnp.ones((G, W, wd), jnp.uint32)
+    v = jnp.ones((G, W, ws), jnp.uint32)
+    q = ad.enqueue(q, a, v)
+    q = ad.enqueue(q, a, v, mask=jnp.asarray([True, False, True]))
+    assert list(np.asarray(ad.backlog(q))) == [2, 1, 2]
+    q = ad.enqueue(q, a, v)                 # groups 0 and 2 are full
+    assert list(np.asarray(q.dropped)) == [1, 0, 1]
+    assert list(np.asarray(ad.backlog(q))) == [2, 2, 2]
+
+
+def test_engine_facade_enqueue_adaptive_pass():
+    """Engine.enqueue + Engine.adaptive_pass drains to the same merged
+    output as Engine.run on the drain-padded arrays."""
+    cfg = make_cfg("gated", K=3, policy="unstable")
+    lens = [T0, 4, 7]
+    acks, votes, holds = rand_traffic(cfg, lens, seed=2)
+
+    ref_eng = api.Engine.create(cfg)
+    m_ref, c_ref, com_ref = ref_eng.run(pad(acks), pad(votes), pad(holds))
+
+    eng = api.Engine.create(cfg)
+    for t in range(T0):
+        eng.enqueue(acks[t], votes[t], holds[t],
+                    mask=jnp.asarray([t < n for n in lens]))
+    for _ in range(T0 + E):
+        out = eng.adaptive_pass()
+    assert int(out["rounds"]) == 0          # quiesced
+    m, c, com = eng.committed()
+    assert int(c) == int(c_ref)
+    assert np.array_equal(np.asarray(m_ref)[:int(c_ref)],
+                          np.asarray(m)[:int(c)])
+    assert int(com) == int(com_ref)
+
+
+def test_pipeline_adaptive_matches_lockstep():
+    """Closed pipeline with EngineConfig.adaptive (subtick re-absorption
+    mode): drains everything admitted and decodes to exactly the same
+    per-lane suborders as the lock-step pipeline."""
+    from repro.pipeline.closed import (PipelineConfig, build_route_table,
+                                       committed, decode_merged,
+                                       init_pipeline, run_pipeline)
+    from repro.pipeline.workload import WorkloadModel
+
+    def make_pcfg(adaptive):
+        return PipelineConfig(
+            engine=api.EngineConfig(
+                groups=2, window=16, n_diss=5, n_seq=3, order_budget=4,
+                merge_capacity=2 * 2048,
+                recycling=api.RecyclingConfig(watermark=8, id_stride=4096),
+                gating=api.GatingConfig(),
+                adaptive=adaptive),
+            n_clients=10, budget_bytes=2500, capacity=128,
+            seq_capacity=64, ack_lag=(0, 1, 1, 2, 2),
+            hold_lag=(0, 0, 1, 1, 2), vote_lag=(1, 2, 2))
+
+    T, quiesce = 40, 15
+    wl = WorkloadModel(n_clients=10, arrival_rate=0.6,
+                       size_choices=(100, 400)).draw(jax.random.PRNGKey(7),
+                                                     T)
+    arrived = jnp.asarray(np.concatenate(
+        [np.asarray(wl.arrived[:T - quiesce]),
+         np.zeros((quiesce, 10), bool)]))
+    sizes = jnp.asarray(np.concatenate(
+        [np.asarray(wl.sizes[:T - quiesce]),
+         np.zeros((quiesce, 10), np.int32)]))
+
+    results = {}
+    for name, acfg in (("lockstep", None),
+                       ("adaptive",
+                        ad.AdaptiveConfig(max_tiles_per_tick=3,
+                                          policy="unstable"))):
+        cfg = make_pcfg(acfg)
+        rt = jnp.asarray(build_route_table(cfg))
+        st = init_pipeline(cfg)
+        st, outs = run_pipeline(cfg, st, arrived, sizes, rt)
+        assert int(outs["dropped"].sum()) == 0
+        assert not bool(st.overflowed)
+        merged, cnt, com = committed(cfg, st)
+        bids = decode_merged(cfg, st, merged, com)
+        results[name] = (int(outs["admitted"].sum()), int(cnt), int(com),
+                         bids)
+
+    adm_l, cnt_l, com_l, bids_l = results["lockstep"]
+    adm_a, cnt_a, com_a, bids_a = results["adaptive"]
+    assert adm_l == adm_a > 0
+    # both drain fully: everything admitted is ordered and committed
+    assert cnt_l == adm_l == com_l
+    assert cnt_a == adm_a == com_a
+    # same bid multiset; identical per-lane (seq-ordered) suborders
+    assert sorted(bids_l) == sorted(bids_a)
+    for lane in {b[0] for b in bids_l}:
+        sub_l = [b for b in bids_l if b[0] == lane]
+        sub_a = [b for b in bids_a if b[0] == lane]
+        assert sub_l == sub_a == sorted(sub_l, key=lambda b: b[1])
