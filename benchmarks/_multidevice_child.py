@@ -1,0 +1,54 @@
+"""Subprocess body for ``benchmarks/run.py --only multidevice``.
+
+Runs the device-sharded engine (``EngineConfig(mesh=MeshConfig())``) on
+whatever device topology the parent selected via ``XLA_FLAGS=
+--xla_force_host_platform_device_count=N`` — which must be set before
+jax initializes its backend, hence the subprocess — and prints one JSON
+line: device count, mean wall µs per saturated drain, committed ids,
+and a sha256 over the merged learner prefix.  The parent compares the
+checksums across device counts: the meshed engine's contract is that
+the merged log is **bit-identical** for any N.
+"""
+import hashlib
+import json
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import api
+    from repro.engine.api import EngineConfig, MeshConfig, create_state
+
+    # mirror bench_sharded_engine's G=8 leg (saturated backlog, the
+    # order budget is the only throughput limiter), meshed
+    G, W, D, SEQ, BUDGET, SLACK = 8, 1024, 1000, 16, 64, 4
+    T = W // BUDGET + SLACK
+    wd, ws = (D + 31) // 32, (SEQ + 31) // 32
+    packs = jnp.asarray(np.full((T, G, W, wd), 0xFFFFFFFF, np.uint32))
+    votes = jnp.asarray(np.full((T, G, W, ws), 0xFFFFFFFF, np.uint32))
+    cfg = EngineConfig(groups=G, window=W, n_diss=D, n_seq=SEQ,
+                       order_budget=BUDGET, merge_capacity=T * BUDGET,
+                       mesh=MeshConfig())
+
+    def run():
+        # fresh state per call — api.run donates it on the meshed path
+        _, merged, _, com = api.run(cfg, create_state(cfg), packs, votes)
+        return merged, jax.block_until_ready(com)
+
+    run()                                   # warm (compile)
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        merged, com = run()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    ids = int(com)
+    digest = hashlib.sha256(np.asarray(merged[:ids]).tobytes()).hexdigest()
+    print(json.dumps({"devices": len(jax.devices()), "us": us,
+                      "ids": ids, "checksum": digest}))
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,11 @@ figure-level quantity the paper plots).
           merged ids/s vs lock-step ticking under a skewed workload
           (one slow group) and a uniform control, bit-identical merged
           output asserted — written to BENCH_adaptive_batching.json
+  multidevice  device-sharded engine (repro.engine.meshed): merged
+          ids/s at 1 vs 8 emulated host devices (subprocess per count;
+          sha256 bit-identity of the merged log asserted) plus the
+          donated-vs-undonated buffer micro-ratio — written to
+          BENCH_multidevice.json
   kernels interpret-mode kernel sanity timings
 
 Run everything (``python benchmarks/run.py``), one bench by its short
@@ -52,12 +57,17 @@ import numpy as np
 from repro.core import analytical as A
 
 
-def _t(fn, n=3):
-    fn()  # warm
-    t0 = time.perf_counter()
-    for _ in range(n):
+def _time_loop(fn, *, warmup=1, iters=3):
+    """Mean wall time of ``fn()`` in µs over ``iters`` timed calls,
+    after ``warmup`` untimed calls (jit compilation, caches).  ``fn``
+    must block on its device work (``jax.block_until_ready``) — the
+    loop times whatever the callable lets escape."""
+    for _ in range(warmup):
         fn()
-    return (time.perf_counter() - t0) / n * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def emit(name, us, derived):
@@ -79,7 +89,7 @@ def bench_fig1() -> None:
     m, s = 1000, 20
     for n in (10_000, 50_000, 100_000, 500_000):
         rows = {}
-        us = _t(lambda: rows.update(
+        us = _time_loop(lambda: rows.update(
             ht_leader=A.paper_ht_leader(n, m, s)["total"],
             ht_diss=A.paper_ht_disseminator(n, m, s)["total"],
             spaxos=A.paper_spaxos_leader(n, m)["total"],
@@ -158,7 +168,7 @@ def bench_delays() -> None:
         c = sim.clients[0]
         (rid, t), = c.replied.items()
         return t - c.pending[rid]
-    us = _t(lambda: ht())
+    us = _time_loop(lambda: ht())
     emit("delays/ht_response", us, f"{ht():.0f} (paper: 4)")
 
     def ring(m):
@@ -170,7 +180,7 @@ def bench_delays() -> None:
         (rid, t), = c.replied.items()
         return t - c.pending[rid]
     for m in (3, 5, 8):
-        emit(f"delays/ring_response/m={m}", _t(lambda m=m: ring(m)),
+        emit(f"delays/ring_response/m={m}", _time_loop(lambda m=m: ring(m)),
              f"{ring(m):.0f} (paper: m+2={m + 2})")
 
     def spx():
@@ -180,7 +190,7 @@ def bench_delays() -> None:
         c = sim.clients[0]
         (rid, t), = c.replied.items()
         return t - c.pending[rid]
-    emit("delays/spaxos_response", _t(spx), f"{spx():.0f} (paper: 6)")
+    emit("delays/spaxos_response", _time_loop(spx), f"{spx():.0f} (paper: 6)")
 
     def cls():
         sim = ClassicalSim(ClassicalConfig(n_acceptors=5, n_clients=1,
@@ -190,7 +200,7 @@ def bench_delays() -> None:
         c = sim.clients[0]
         (rid, t), = c.replied.items()
         return t - c.pending[rid]
-    emit("delays/classical_response", _t(cls), f"{cls():.0f} (paper: 4)")
+    emit("delays/classical_response", _time_loop(cls), f"{cls():.0f} (paper: 4)")
 
 
 def bench_sim_throughput() -> None:
@@ -220,11 +230,11 @@ def bench_sim_throughput() -> None:
                     + sim.lan2._stats(r).total_msgs())
                    for r in sim.replica_ids)
 
-    us = _t(lambda: ht(), n=2)
+    us = _time_loop(lambda: ht(), iters=2)
     busiest, leader = ht()
     emit("throughput/ht_busiest_node_msgs", us, busiest)
     emit("throughput/ht_leader_msgs", us, leader)
-    emit("throughput/spaxos_busiest_node_msgs", _t(lambda: spx(), n=2),
+    emit("throughput/spaxos_busiest_node_msgs", _time_loop(lambda: spx(), iters=2),
          spx())
 
 
@@ -245,7 +255,7 @@ def bench_engine() -> None:
                                      diss_majority=D // 2 + 1,
                                      seq_majority=S // 2 + 1)
         return jax.block_until_ready(out_st.next_instance)
-    us = _t(run, n=5)
+    us = _time_loop(run, iters=5)
     ordered = int(run())
     emit("engine/ticks_32x2048", us, f"{ordered} ids ordered")
     emit("engine/ids_per_sec", us, f"{ordered / (us / 1e6):.0f}")
@@ -281,14 +291,16 @@ def bench_sharded_engine() -> None:
         pvotes = np.full((T, G, Wg, words_s), 0xFFFFFFFF, np.uint32)
         cfg = EngineConfig(groups=G, window=Wg, n_diss=D, n_seq=SEQ,
                            order_budget=BUDGET, merge_capacity=T * BUDGET)
-        st0 = create_state(cfg)
 
         def run():
-            st, merged, cnt, committed = api.run(cfg, st0, packs, pvotes)
+            # fresh state per call: api.run donates it (cheap next to the
+            # T-tick scan, and a reused donated buffer would be deleted)
+            st, merged, cnt, committed = api.run(cfg, create_state(cfg),
+                                                 packs, pvotes)
             # votes are saturated: every ordered id is also committed, so
             # the consumable prefix IS the full merged order
             return jax.block_until_ready(committed)
-        us = _t(run, n=5)
+        us = _time_loop(run, iters=5)
         ordered = int(run())
         ids_per_sec = ordered / (us / 1e6)
         emit(f"sharded_engine/G={G}", us, f"{ids_per_sec:.0f} ids/s "
@@ -544,7 +556,7 @@ def bench_pipeline() -> None:
                              wl.sizes, rt)
         jax.block_until_ready(st.tick)
         return st
-    us_pipe = _t(run_pipe, n=5)
+    us_pipe = _time_loop(run_pipe, iters=5)
     st = run_pipe()
     assert not bool(st.overflowed)
     pipe_ids = int(committed(pcfg, st)[2])
@@ -562,7 +574,7 @@ def bench_pipeline() -> None:
         _, _, _, com = api.run(pcfg.engine, create_state(pcfg.engine),
                                acks, votes, holds_seq=holds)
         return int(jax.block_until_ready(com))
-    us_eng = _t(run_eng, n=5)
+    us_eng = _time_loop(run_eng, iters=5)
     eng_ids = run_eng()
     eng_rate = eng_ids / (us_eng / 1e6)
     ratio = pipe_rate / eng_rate
@@ -621,13 +633,13 @@ def bench_kernels() -> None:
     def k_ref():
         return jax.block_until_ready(
             ref.quorum_ref(bits, upd, stable, majority=501)[1])
-    emit("kernels/quorum_ref_jit", _t(k_ref, n=10), f"W={W},D={D}")
+    emit("kernels/quorum_ref_jit", _time_loop(k_ref, iters=10), f"W={W},D={D}")
 
     def k_pal():
         return jax.block_until_ready(
             quorum_update(bits, upd, stable, majority=501,
                           interpret=True)[1])
-    emit("kernels/quorum_pallas_interpret", _t(k_pal, n=3),
+    emit("kernels/quorum_pallas_interpret", _time_loop(k_pal, iters=3),
          "(interpret mode = python loop; TPU timing n/a on CPU)")
 
 
@@ -668,7 +680,7 @@ def bench_dissem() -> None:
         def run():
             st, out = stability_tick(st0, packed_j, majority=maj)
             return jax.block_until_ready(out["counts"])
-        us = _t(run, n=5)
+        us = _time_loop(run, iters=5)
         st, _ = stability_tick(st0, packed_j, majority=maj)
         in_b, out_b = per_node_bytes(st, owner, nb, mp)
         cf = replication_bytes_per_node(K, Q, mp)
@@ -702,7 +714,7 @@ def bench_dissem() -> None:
                 st, out = stability_tick_fused(st0, packed_j, majority=maj,
                                                block_w=64)
                 return jax.block_until_ready(out["newly_per_group"])
-            emit("dissem/fused_kernel_interpret", _t(run_fused, n=2),
+            emit("dissem/fused_kernel_interpret", _time_loop(run_fused, iters=2),
                  "(interpret mode = python loop; TPU timing n/a on CPU)")
     assert all(r["partitioned_below_global"] for r in rows)
     _write_bench_json("BENCH_sharded_dissemination.json", rows)
@@ -770,8 +782,10 @@ def bench_adaptive() -> None:
 
         # probe the pass count to quiescence (R==0 ⇔ queues empty and no
         # assignable backlog); the policy is deterministic so the count
-        # is stable across the timed repetitions
-        P_adapt, st_p, q_p = 0, st0, q0
+        # is stable across the timed repetitions.  adaptive_pass_jit
+        # donates state+queue, so every consumer below works on a fresh
+        # tree copy and st0/q0 stay alive for the next run
+        P_adapt, (st_p, q_p) = 0, jax.tree.map(jnp.copy, (st0, q0))
         while P_adapt < 2 * T_lock:
             st_p, q_p, pout = ad.adaptive_pass_jit(cfg, st_p, q_p)
             P_adapt += 1
@@ -788,7 +802,7 @@ def bench_adaptive() -> None:
             return st, m, jax.block_until_ready(c), com
 
         def run_adaptive():
-            st, q = st0, q0
+            st, q = jax.tree.map(jnp.copy, (st0, q0))
             for _ in range(P_adapt):
                 st, q, _ = ad.adaptive_pass_jit(cfg, st, q)
             m, c, com = api.committed_prefix(cfg, st)
@@ -806,8 +820,8 @@ def bench_adaptive() -> None:
         assert int(com_l) == int(com_a)
 
         ids = int(c_l)
-        us_l = _t(lambda: run_lockstep()[2], n=5)
-        us_a = _t(lambda: run_adaptive()[3], n=5)
+        us_l = _time_loop(lambda: run_lockstep()[2], iters=5)
+        us_a = _time_loop(lambda: run_adaptive()[3], iters=5)
         rate_l, rate_a = ids / (us_l / 1e6), ids / (us_a / 1e6)
         speedup = rate_a / rate_l
         emit(f"adaptive/{scenario}/lockstep", us_l,
@@ -833,6 +847,112 @@ def bench_adaptive() -> None:
     _write_bench_json("BENCH_adaptive_batching.json", rows)
 
 
+def bench_multidevice() -> None:
+    """Device-sharded engine (repro.engine.meshed): merged ids/second at
+    1 vs 8 emulated host devices, plus the buffer-donation micro-ratio.
+
+    Each device count runs in a subprocess (``_multidevice_child.py``) —
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set
+    before jax initializes its backend. The child drains the same
+    saturated G=8 backlog as bench_sharded_engine's widest leg through
+    ``EngineConfig(mesh=MeshConfig())`` and reports a sha256 over the
+    merged learner prefix; the parent *asserts* the checksums match —
+    the meshed engine's bit-identity contract — before reporting any
+    rate. The ≥2× scaling bar only makes sense when the emulated
+    devices map to real cores, so the JSON records ``host_cpus`` and an
+    honest ``meets_bar`` instead of asserting (1 emulated-device thread
+    per core is the XLA CPU model; an N-core CI runner is the target).
+
+    The donation micro runs in-process on the default backend: the same
+    fused scan through the donating ``run_sharded_ticks_merged`` (fresh
+    pre-built state consumed per call) vs an undonated re-jit of its
+    ``__wrapped__``, ratio = undonated/donated wall time."""
+    import os
+    import subprocess
+    import sys
+
+    import jax
+    from repro.engine import api, sharded as sharded_mod
+    from repro.engine.api import EngineConfig, create_state
+
+    here = Path(__file__).resolve().parent
+    src = here.parent / "src"
+    rows = []
+
+    runs = {}
+    for ndev in (1, 8):
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+            PYTHONPATH=str(src) + os.pathsep + os.environ.get(
+                "PYTHONPATH", ""))
+        proc = subprocess.run(
+            [sys.executable, str(here / "_multidevice_child.py")],
+            env=env, capture_output=True, text=True, check=True)
+        runs[ndev] = json.loads(proc.stdout.splitlines()[-1])
+    # bit-identity is a hard invariant, not a perf number
+    assert runs[1]["checksum"] == runs[8]["checksum"], runs
+    assert runs[8]["devices"] == 8, runs
+    for ndev, r in runs.items():
+        rate = r["ids"] / (r["us"] / 1e6)
+        emit(f"multidevice/devices={ndev}", r["us"],
+             f"{rate:.0f} ids/s ({r['ids']} ids, G=8 meshed)")
+        rows.append({"name": f"multidevice/devices={ndev}",
+                     "us_per_call": r["us"], "devices": ndev,
+                     "ids_ordered": r["ids"], "ids_per_sec": rate,
+                     "merged_sha256": r["checksum"]})
+    speedup = runs[1]["us"] / runs[8]["us"]
+    host_cpus = os.cpu_count()
+    emit("multidevice/speedup_8v1", 0.1,
+         f"{speedup:.2f}x (host_cpus={host_cpus}; bar >=2.0 applies on "
+         "multi-core hosts — emulated devices share these cores)")
+    rows.append({"name": "multidevice/speedup_8v1", "speedup": speedup,
+                 "host_cpus": host_cpus, "bit_identical": True,
+                 "bar": 2.0, "meets_bar": bool(speedup >= 2.0)})
+
+    # donation micro: identical scan, donated vs undonated buffers
+    import jax.numpy as jnp
+    G, W, D, SEQ, BUDGET = 4, 2048, 1000, 16, 64
+    T = W // BUDGET + 2
+    wd, ws = (D + 31) // 32, (SEQ + 31) // 32
+    packs = jnp.asarray(np.full((T, G, W, wd), 0xFFFFFFFF, np.uint32))
+    votes = jnp.asarray(np.full((T, G, W, ws), 0xFFFFFFFF, np.uint32))
+    cfg = EngineConfig(groups=G, window=W, n_diss=D, n_seq=SEQ,
+                       order_budget=BUDGET, merge_capacity=T * BUDGET)
+    kw = dict(diss_majority=cfg.diss_majority,
+              seq_majority=cfg.seq_majority,
+              order_budget=BUDGET, max_entries=cfg.max_entries)
+    donated = sharded_mod.run_sharded_ticks_merged
+    undonated = jax.jit(
+        donated.__wrapped__,
+        static_argnames=("diss_majority", "seq_majority", "order_budget",
+                         "max_entries"))
+    WARM, ITERS = 1, 5
+    pool = [create_state(cfg) for _ in range(WARM + ITERS)]
+    it = iter(pool)
+
+    def run_donated():
+        st = next(it)
+        out = donated(st.core, st.merge, packs, votes, st.slot_ids, **kw)
+        jax.block_until_ready(out[-1])
+
+    def run_undonated():
+        st = pool[-1]  # never consumed by the donating path above
+        out = undonated(st.core, st.merge, packs, votes, st.slot_ids,
+                        **kw)
+        jax.block_until_ready(out[-1])
+
+    us_undon = _time_loop(run_undonated, warmup=WARM, iters=ITERS)
+    us_don = _time_loop(run_donated, warmup=WARM, iters=ITERS)
+    ratio = us_undon / us_don
+    emit("multidevice/donation_ratio", us_don,
+         f"{ratio:.3f}x undonated/donated (undonated {us_undon:.0f} us)")
+    rows.append({"name": "multidevice/donation_ratio",
+                 "us_donated": us_don, "us_undonated": us_undon,
+                 "undonated_over_donated": ratio})
+    _write_bench_json("BENCH_multidevice.json", rows)
+
+
 BENCHES = {
     "fig1": bench_fig1, "fig2": bench_fig2, "fig3": bench_fig3,
     "fig45": bench_fig45, "fig6": bench_fig6, "fig7": bench_fig7,
@@ -840,7 +960,8 @@ BENCHES = {
     "engine": bench_engine, "sharded_engine": bench_sharded_engine,
     "sustained_engine": bench_sustained_engine, "dissem": bench_dissem,
     "membership": bench_membership, "pipeline": bench_pipeline,
-    "adaptive": bench_adaptive, "kernels": bench_kernels,
+    "adaptive": bench_adaptive, "multidevice": bench_multidevice,
+    "kernels": bench_kernels,
 }
 
 

@@ -142,16 +142,21 @@ def init_queue(cfg, capacity: int | None = None) -> TrafficQueue:
         raise ValueError("init_queue() needs EngineConfig.adaptive set")
     C = int(cfg.adaptive.queue_capacity if capacity is None else capacity)
     G, W = cfg.groups, cfg.window
-    zeros = jnp.zeros((G,), jnp.int32)
     holds = None
     if cfg.gating is not None:
         holds = jnp.zeros(
             (G, C, W, jaxsim._words(cfg.gating.n_diss_partition)),
             jnp.uint32)
+    # head/tail/dropped are three separate allocations on purpose: the
+    # queue is a donated operand of adaptive_pass_jit, and donating a
+    # pytree holding the same buffer in two leaves is a runtime error
+    # ("attempt to donate the same buffer twice")
     return TrafficQueue(
         acks=jnp.zeros((G, C, W, jaxsim._words(cfg.n_diss)), jnp.uint32),
         votes=jnp.zeros((G, C, W, jaxsim._words(cfg.n_seq)), jnp.uint32),
-        holds=holds, head=zeros, tail=zeros, dropped=zeros)
+        holds=holds, head=jnp.zeros((G,), jnp.int32),
+        tail=jnp.zeros((G,), jnp.int32),
+        dropped=jnp.zeros((G,), jnp.int32))
 
 
 def backlog(queue: TrafficQueue) -> jax.Array:
@@ -255,12 +260,17 @@ def _assignable(q: jaxsim.QuorumState) -> jax.Array:
     return jnp.sum(q.stable & (q.instance < 0), axis=-1, dtype=jnp.int32)
 
 
-def _state_lag(cfg, state, policy: str) -> jax.Array:
-    """Per-group lag from engine state alone (no queue)."""
-    q = _quorum(cfg, state.core)
+def _state_lag(cfg, core, dissem, policy: str) -> jax.Array:
+    """Per-group lag from engine state alone (no queue).
+
+    Takes the family ``core``/``dissem`` pair rather than an
+    EngineState so the meshed path can evaluate it on a device's local
+    group rows (the metric is row-wise; only the spread reduction in
+    :func:`_rounds_from_spread` crosses groups)."""
+    q = _quorum(cfg, core)
     if policy == "undecided":
         return undecided_depth(q)
-    d = _dissem(cfg, state.core, state.dissem)
+    d = _dissem(cfg, core, dissem)
     if d is not None:
         return dissem_engine.unstable_backlog(d)
     # ungated families: quorum-side stability plays the dissemination role
@@ -288,7 +298,7 @@ def plan_rounds(cfg, state, queue: TrafficQueue)\
     ad = cfg.adaptive
     rem = backlog(queue)
     lag = rem if ad.policy == "backlog" \
-        else _state_lag(cfg, state, ad.policy)
+        else _state_lag(cfg, state.core, state.dissem, ad.policy)
     R = _rounds_from_spread(ad, lag)
     need = (rem > 0) | (_assignable(_quorum(cfg, state.core)) > 0)
     R = jnp.where(jnp.any(need), R, 0).astype(jnp.int32)
@@ -305,11 +315,16 @@ def _select_groups(mask: jax.Array, new, old):
     return jax.tree.map(sel, new, old)
 
 
-def _family_tick(cfg, core, dissem, slot_ids, acks, votes, holds):
+def _family_tick(cfg, core, dissem, slot_ids, acks, votes, holds,
+                 id_base=None):
     """One full engine tick of all groups, any family: absorb → assign →
     vote (→ recycle).  Returns (core', dissem', assigned int32[G, W],
     sids int32[G, W] — the slot→id map *at assignment time*, i.e. before
-    any recycle, which is what merge entries must snapshot)."""
+    any recycle, which is what merge entries must snapshot).
+
+    Shape-polymorphic in the leading row axis; ``id_base`` is the
+    recycled families' fresh-id range override (``sharded.recycle_groups``)
+    — the meshed engine passes global group offsets for its local rows."""
     fam = cfg.family
     vtick = jax.vmap(functools.partial(
         jaxsim.engine_tick_packed, diss_majority=cfg.diss_majority,
@@ -328,7 +343,7 @@ def _family_tick(cfg, core, dissem, slot_ids, acks, votes, holds):
                                       retired=core.retired)
         rs, _ = sharded_mod.recycle_groups(
             rs, watermark=cfg.recycling.watermark,
-            id_stride=cfg.recycling.id_stride)
+            id_stride=cfg.recycling.id_stride, id_base=id_base)
         return rs, None, out["assigned"], sids
     # gated_recycled
     d, _ = absorb_holds_packed(core.d, holds, cfg.gating.stab_majority)
@@ -341,25 +356,31 @@ def _family_tick(cfg, core, dissem, slot_ids, acks, votes, holds):
     gs, _ = sharded_mod.gated_recycle_groups(
         gs, watermark=cfg.recycling.watermark,
         id_stride=cfg.recycling.id_stride,
-        fresh_stable=cfg.gating.fresh_stable)
+        fresh_stable=cfg.gating.fresh_stable, id_base=id_base)
     return gs, None, out["assigned"], sids
 
 
-def _masked_rounds(cfg, state, R, tile_fn, consume_of):
-    """Shared inner loop of :func:`adaptive_pass` / :func:`subtick_pass`.
+def _masked_rounds_core(cfg, core, dissem, slot_ids, R, tile_fn,
+                        consume_of, id_base=None):
+    """The fixed-K ``fori_loop`` of an adaptive pass, merge append
+    excluded.
 
-    Runs the fixed-K ``fori_loop``; round j ticks exactly the groups
-    ``consume_of(j) | assignable`` (masked per group, whole-round
-    compute skipped via ``lax.cond`` when no group is active), appends
-    fixed-width rounds into a [G, K·rw] SKIP-initialized buffer, and
-    merge-appends R·rw entries per group in one wide write."""
+    Round j ticks exactly the groups ``consume_of(j) | assignable``
+    (masked per group, whole-round compute skipped via ``lax.cond``
+    when no group is active) and writes its fixed-width entries into a
+    [rows, K·rw] SKIP-initialized buffer.  Shape-polymorphic in the
+    leading row axis: the unmeshed wrapper runs it over all G groups,
+    the meshed path over one device's local rows (the per-group cond
+    gate makes local any-activity skipping bit-exact — an inactive
+    group's round is all-SKIP either way).  Returns ``(core, dissem,
+    buf, dropped)``."""
     K = cfg.adaptive.max_tiles_per_tick
     rw = cfg.max_entries
-    G = cfg.groups
+    rows = jax.tree.leaves(core)[0].shape[0]
 
     def body(j, carry):
         core, dissem, buf, dropped = carry
-        consume = consume_of(j)                              # bool[G]
+        consume = consume_of(j)                              # bool[rows]
         assignable = _assignable(_quorum(cfg, core)) > 0
         active = (j < R) & (consume | assignable)
 
@@ -367,7 +388,7 @@ def _masked_rounds(cfg, state, R, tile_fn, consume_of):
             core, dissem, buf, dropped = carry
             a, v, h = tile_fn(j, consume)
             ncore, ndissem, assigned, sids = _family_tick(
-                cfg, core, dissem, state.slot_ids, a, v, h)
+                cfg, core, dissem, slot_ids, a, v, h, id_base=id_base)
             assigned = jnp.where(active[:, None], assigned, -1)
             entries, _, drop_g = merge_mod.round_entries(assigned, sids,
                                                          rw)
@@ -383,10 +404,20 @@ def _masked_rounds(cfg, state, R, tile_fn, consume_of):
         return jax.lax.cond(jnp.any(active), run_round, lambda c: c,
                             (core, dissem, buf, dropped))
 
-    buf = jnp.full((G, K * rw), merge_mod.SKIP, jnp.int32)
-    core, dissem, buf, dropped = jax.lax.fori_loop(
-        0, K, body, (state.core, state.dissem, buf, jnp.int32(0)))
-    counts = jnp.broadcast_to(R * rw, (G,)).astype(jnp.int32)
+    buf = jnp.full((rows, K * rw), merge_mod.SKIP, jnp.int32)
+    return jax.lax.fori_loop(0, K, body,
+                             (core, dissem, buf, jnp.int32(0)))
+
+
+def _masked_rounds(cfg, state, R, tile_fn, consume_of):
+    """Shared inner loop of :func:`adaptive_pass` / :func:`subtick_pass`:
+    run :func:`_masked_rounds_core` over all G groups, then merge-append
+    R·rw entries per group in one wide write."""
+    core, dissem, buf, dropped = _masked_rounds_core(
+        cfg, state.core, state.dissem, state.slot_ids, R, tile_fn,
+        consume_of)
+    rw = cfg.max_entries
+    counts = jnp.broadcast_to(R * rw, (cfg.groups,)).astype(jnp.int32)
     ms = merge_mod.append_entries(state.merge, buf, counts)
     return state._replace(core=core, dissem=dissem, merge=ms), dropped
 
@@ -407,6 +438,9 @@ def adaptive_pass(cfg, state, queue: TrafficQueue)\
         raise ValueError(
             "queue hold tiles are required exactly when gating is "
             f"configured: family={cfg.family!r}")
+    if cfg.mesh is not None:
+        from . import meshed as meshed_mod
+        return meshed_mod.adaptive_pass(cfg, state, queue)
     C = queue.acks.shape[1]
     g = jnp.arange(cfg.groups)
     R, k = plan_rounds(cfg, state, queue)
@@ -425,10 +459,16 @@ def adaptive_pass(cfg, state, queue: TrafficQueue)\
     return state, queue, {"rounds": R, "consumed": k, "dropped": dropped}
 
 
-adaptive_pass_jit = jax.jit(adaptive_pass, static_argnames=("cfg",))
+# state and queue are donated: one adaptive pass rewrites both wholesale,
+# so the input trees are dead the moment the call returns (callers thread
+# the returned pair; anyone re-reading the donated inputs gets jax's
+# deleted-buffer error, not silent stale data)
+adaptive_pass_jit = jax.jit(adaptive_pass, static_argnames=("cfg",),
+                            donate_argnums=(1, 2))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_passes"))
+@functools.partial(jax.jit, static_argnames=("cfg", "n_passes"),
+                   donate_argnums=(1, 2))
 def run_adaptive(cfg, state, queue: TrafficQueue, *, n_passes: int)\
         -> tuple[Any, TrafficQueue, jax.Array, jax.Array, jax.Array]:
     """Fused adaptive hot loop: scan ``n_passes`` passes, then gate.
@@ -472,9 +512,13 @@ def subtick_pass(cfg, state, acks: jax.Array, votes: jax.Array,
     Returns ``(state, out)`` like ``api.tick`` (plus ``out["rounds"]``)."""
     if cfg.adaptive is None:
         raise ValueError("subtick_pass() needs EngineConfig.adaptive set")
+    if cfg.mesh is not None:
+        from . import meshed as meshed_mod
+        return meshed_mod.subtick_pass(cfg, state, acks, votes, holds)
     policy = "undecided" if cfg.adaptive.policy == "backlog" \
         else cfg.adaptive.policy
-    R = _rounds_from_spread(cfg.adaptive, _state_lag(cfg, state, policy))
+    R = _rounds_from_spread(
+        cfg.adaptive, _state_lag(cfg, state.core, state.dissem, policy))
 
     def tile_fn(j, consume):
         return acks, votes, holds

@@ -90,6 +90,28 @@ class GatingConfig:
     fresh_stable: bool = False
 
 
+@dataclass(frozen=True)
+class MeshConfig:
+    """Device-sharded group execution knobs (``repro.engine.meshed``).
+
+    When set on :class:`EngineConfig`, the hot entry points
+    (:func:`tick`, :func:`run`, ``adaptive_pass`` and the pipeline's
+    engine stage) partition the G group rows across a 1-D ``("group",)``
+    device mesh with ``shard_map``: per-group quorum/stability/adaptive
+    work runs device-parallel with zero cross-device traffic, and only
+    the round-robin merge crosses devices (one ``all_gather`` of
+    fixed-width entry rows per pass). The merged learner log is
+    **bit-identical** to the unmeshed path for any device count.
+
+    ``n_devices``: mesh size; ``None`` → all available devices. Clamped
+    at first use to the available device count and to ``groups`` via
+    ``launch.mesh.make_group_mesh`` (when the clamped size does not
+    divide ``groups``, inert pad rows are added internally and sliced
+    off before the merge). ``axis_name``: the mesh axis name."""
+    n_devices: int | None = None
+    axis_name: str = "group"
+
+
 def _majority(n: int) -> int:
     return n // 2 + 1
 
@@ -119,6 +141,7 @@ class EngineConfig:
     gating: GatingConfig | None = None
     epochs: EpochTable | None = None
     adaptive: AdaptiveConfig | None = None
+    mesh: MeshConfig | None = None
 
     def __post_init__(self):
         def norm(field, value):
@@ -197,6 +220,19 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.adaptive must be an AdaptiveConfig, got "
                 f"{type(self.adaptive).__name__}")
+        if self.mesh is not None:
+            m = self.mesh
+            if not isinstance(m, MeshConfig):
+                raise ValueError(
+                    f"EngineConfig.mesh must be a MeshConfig, got "
+                    f"{type(m).__name__}")
+            if m.n_devices is not None and int(m.n_devices) < 1:
+                raise ValueError(
+                    f"MeshConfig.n_devices must be >= 1, got "
+                    f"{m.n_devices}")
+            norm("mesh", MeshConfig(
+                None if m.n_devices is None else int(m.n_devices),
+                str(m.axis_name)))
         if self.epochs is not None and self.epochs.n_rows != self.groups:
             raise ValueError(
                 f"EpochTable.n_rows={self.epochs.n_rows} must equal "
@@ -290,8 +326,15 @@ def tick(cfg: EngineConfig, state: EngineState, acks: jax.Array,
     calls — recycling remaps slots). Returns ``(state, out)`` with the
     family tick's outputs plus ``out["dropped"]`` (always 0 given the
     config-time ``max_entries`` check; returned so run loops can assert
-    it)."""
+    it).
+
+    With ``cfg.mesh`` set, dispatches to the device-sharded path
+    (``engine.meshed``): same state pytree and merge log bit-for-bit,
+    but ``out`` is the reduced meshed dict (``assigned``/``dropped``)."""
     _need_holds(cfg, holds)
+    if cfg.mesh is not None:
+        from . import meshed as meshed_mod
+        return meshed_mod.tick(cfg, state, acks, votes, holds)
     fam = cfg.family
     if fam == "recycled":
         rs, ms, out = sharded_mod.recycled_tick_merged(
@@ -336,8 +379,16 @@ def run(cfg: EngineConfig, state: EngineState, acks_seq: jax.Array,
     ``run_*_ticks_merged`` scan (bit-identical by construction). Returns
     ``(state, merged, merged_count, committed_count)`` — same contract
     and traffic-addressing caveats as the legacy functions (recycled
-    families need position-uniform traffic inside a fused run)."""
+    families need position-uniform traffic inside a fused run).
+
+    With ``cfg.mesh`` set, delegates to the device-sharded scan
+    (``engine.meshed.run_jit``, donating) — bit-identical merged output
+    for any device count."""
     _need_holds(cfg, holds_seq)
+    if cfg.mesh is not None:
+        from . import meshed as meshed_mod
+        return meshed_mod.run_jit(cfg, state, acks_seq, votes_seq,
+                                  holds_seq)
     fam = cfg.family
     kw = dict(diss_majority=cfg.diss_majority,
               seq_majority=cfg.seq_majority,

@@ -35,6 +35,15 @@ untouched, and physical shapes never change: ``n_rows`` (G_max) rows are
 allocated up front and epochs activate subsets, which is what keeps every
 jitted tick shape-stable across membership changes.
 
+The same property makes reconfiguration mesh-transparent: with
+``EngineConfig(mesh=MeshConfig(...))`` the group rows live sharded
+across a device mesh (``engine.meshed``), but ``np.array(...)`` on a
+sharded array gathers it to host transparently, the row swaps happen in
+plain numpy, and the rebuilt arrays re-shard at the next jitted call —
+physical rows never move between devices, so nothing here needs to know
+a mesh exists (``tests/test_multidevice.py`` pins a live flip on
+sharded state bit-identical to the single-device one).
+
 State-transfer model (documented assumptions, asserted where cheap):
 
   * only **admitted-but-unordered** slots move (nonzero observed protocol

@@ -140,8 +140,14 @@ def _assert_no_dropped(dropped) -> None:
             "desynchronized")
 
 
+# the quorum state and merge log are donated: a fused run rewrites both
+# wholesale and callers thread the returned pair, so the inputs are dead
+# on return (re-reading them raises jax's deleted-buffer error rather
+# than showing stale data).  slot_ids and the traffic sequences are NOT
+# donated — callers legitimately reuse them across runs.
 @functools.partial(jax.jit, static_argnames=("diss_majority", "seq_majority",
-                                             "order_budget", "max_entries"))
+                                             "order_budget", "max_entries"),
+                   donate_argnums=(0, 1))
 def run_sharded_ticks_merged(state: QuorumState, merge_state,
                              packed_acks_seq: jax.Array,
                              packed_votes_seq: jax.Array,
@@ -247,7 +253,8 @@ def init_recycled(groups: int, window: int, n_diss: int, n_seq: int,
 
 
 @functools.partial(jax.jit, static_argnames=("watermark", "id_stride"))
-def recycle_groups(rs: RecycleState, *, watermark: int, id_stride: int)\
+def recycle_groups(rs: RecycleState, *, watermark: int, id_stride: int,
+                   id_base: jax.Array | None = None)\
         -> tuple[RecycleState, jax.Array]:
     """Per-group watermark-gated compaction/refill (one fused vmap).
 
@@ -262,13 +269,20 @@ def recycle_groups(rs: RecycleState, *, watermark: int, id_stride: int)\
     case where one undecided old instance pins the frontier — so the
     amortization is real compute savings, not just a masked no-op.
     Returns (state', n_retired int32[G]).
+
+    ``id_base`` int32[rows] overrides the per-row fresh-id range base
+    (default: row index × ``id_stride``).  The meshed engine passes each
+    device's *global* group offsets here — a device's local row 0 is not
+    logical group 0, and fresh ids must come from the logical group's
+    private range no matter which device owns the row.
     """
     G = rs.slot_ids.shape[0]
     free = jnp.sum(~rs.q.decided, axis=1, dtype=jnp.int32)
     head_retirable = jnp.any(
         (rs.q.instance == rs.retired[:, None]) & rs.q.decided, axis=1)
     enable = (free < watermark) & head_retirable
-    id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+    if id_base is None:
+        id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
 
     def compact(rs):
         q, ids, retired, n_ret = jax.vmap(jaxsim.compact_and_refill_packed)(
@@ -340,7 +354,7 @@ def recycled_tick_merged(rs: RecycleState, merge_state,
 
 @functools.partial(jax.jit, static_argnames=(
     "diss_majority", "seq_majority", "order_budget", "max_entries",
-    "watermark", "id_stride"))
+    "watermark", "id_stride"), donate_argnums=(0, 1))
 def run_recycled_ticks_merged(rs: RecycleState, merge_state,
                               packed_acks_seq: jax.Array,
                               packed_votes_seq: jax.Array, *,
@@ -443,7 +457,7 @@ def gated_tick(state: QuorumState, d: DissemState, packed_acks: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "diss_majority", "seq_majority", "stab_majority", "order_budget",
-    "max_entries"))
+    "max_entries"), donate_argnums=(0, 1, 2))
 def run_gated_ticks_merged(state: QuorumState, d: DissemState, merge_state,
                            packed_acks_seq: jax.Array,
                            packed_holds_seq: jax.Array,
@@ -513,7 +527,8 @@ def init_gated_recycled(groups: int, window: int, n_diss: int, n_seq: int,
 @functools.partial(jax.jit, static_argnames=("watermark", "id_stride",
                                              "fresh_stable"))
 def gated_recycle_groups(gs: GatedRecycleState, *, watermark: int,
-                         id_stride: int, fresh_stable: bool = False)\
+                         id_stride: int, fresh_stable: bool = False,
+                         id_base: jax.Array | None = None)\
         -> tuple[GatedRecycleState, jax.Array]:
     """``recycle_groups`` for the gated engine: one shared per-group
     compaction plan moves the quorum window AND the dissemination window,
@@ -523,14 +538,18 @@ def gated_recycle_groups(gs: GatedRecycleState, *, watermark: int,
     dissemination state is spent. Freed slots are born with empty holds
     and ``stable=fresh_stable`` (False models real traffic — a fresh id
     must re-earn stability; True preserves the all-pre-stable
-    bit-identity baseline across recycles)."""
+    bit-identity baseline across recycles).
+
+    ``id_base`` overrides the per-row fresh-id range base exactly as in
+    :func:`recycle_groups` (the meshed engine's global-offset hook)."""
     G = gs.rs.slot_ids.shape[0]
     free = jnp.sum(~gs.rs.q.decided, axis=1, dtype=jnp.int32)
     head_retirable = jnp.any(
         (gs.rs.q.instance == gs.rs.retired[:, None]) & gs.rs.q.decided,
         axis=1)
     enable = (free < watermark) & head_retirable
-    id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
+    if id_base is None:
+        id_base = jnp.arange(G, dtype=jnp.int32) * id_stride
 
     def compact(gs):
         def per_group(q, ids, retired, base, en, holds, stab):
@@ -608,7 +627,8 @@ def gated_recycled_tick_merged(gs: GatedRecycleState, merge_state,
 
 @functools.partial(jax.jit, static_argnames=(
     "diss_majority", "seq_majority", "stab_majority", "order_budget",
-    "max_entries", "watermark", "id_stride", "fresh_stable"))
+    "max_entries", "watermark", "id_stride", "fresh_stable"),
+    donate_argnums=(0, 1))
 def run_gated_recycled_ticks_merged(gs: GatedRecycleState, merge_state,
                                     packed_acks_seq: jax.Array,
                                     packed_holds_seq: jax.Array,

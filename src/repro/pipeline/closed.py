@@ -325,10 +325,15 @@ def pipeline_tick(cfg: PipelineConfig, state: PipelineState,
     return state, out
 
 
-pipeline_tick_jit = jax.jit(pipeline_tick, static_argnames=("cfg",))
+# the pipeline state (engine + admission bookkeeping) is donated: every
+# tick rewrites the whole tree and callers thread the returned state, so
+# the input tree is dead on return.  The workload rows and route table
+# are NOT donated — feeders replay them across runs.
+pipeline_tick_jit = jax.jit(pipeline_tick, static_argnames=("cfg",),
+                            donate_argnums=(1,))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def run_pipeline(cfg: PipelineConfig, state: PipelineState,
                  arrived: jax.Array, sizes: jax.Array,
                  route_table: jax.Array)\

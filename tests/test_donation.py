@@ -1,0 +1,203 @@
+"""Buffer-donation safety for the scan-fused hot entry points.
+
+Donation (``donate_argnums``) is an aliasing hint — XLA may reuse the
+donated input buffers for outputs — and must never change results. Each
+test runs a donating jit entry point against an undonated reference
+(the same function via ``.__wrapped__``, or the un-jitted twin) on
+bit-identical copied inputs and requires bit-identical full outputs.
+Each also pins that donation actually *happened* on this backend
+(``.is_deleted()`` on the donated inputs): if a refactor silently drops
+the donation, the aliasing these tests guard goes untested everywhere
+else, and if a caller reuses a donated tree it must fail loudly rather
+than read stale state.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import jaxsim  # noqa: E402
+from repro.engine import adaptive as AD  # noqa: E402
+from repro.engine import api  # noqa: E402
+from repro.engine import meshed  # noqa: E402
+from repro.engine import sharded as S  # noqa: E402
+from repro.engine.api import (EngineConfig, GatingConfig,  # noqa: E402
+                              MeshConfig, RecyclingConfig)
+from repro.pipeline import closed as PL  # noqa: E402
+from repro.pipeline.workload import WorkloadModel  # noqa: E402
+
+G, W, D, SQ, T = 2, 16, 5, 3, 6
+STRIDE = 1 << 16
+
+FAMILY_KW = {
+    "plain": {},
+    "gated": dict(gating=GatingConfig()),
+    "recycled": dict(recycling=RecyclingConfig(watermark=4,
+                                               id_stride=STRIDE)),
+    "gated_recycled": dict(recycling=RecyclingConfig(watermark=4,
+                                                     id_stride=STRIDE),
+                           gating=GatingConfig()),
+}
+
+
+def _cfg(fam, **extra):
+    return EngineConfig(groups=G, window=W, n_diss=D, n_seq=SQ,
+                        order_budget=4, merge_capacity=2048,
+                        **FAMILY_KW[fam], **extra)
+
+
+def tiles(seed, n, *, density=0.7):
+    rng = np.random.default_rng(seed)
+    bits = rng.random((T, G, W, n)) < density
+    return jax.vmap(jax.vmap(jaxsim.pack_tile))(jnp.asarray(bits))
+
+
+def traffic_for(cfg, seed=0):
+    acks = tiles(seed, D)
+    votes = tiles(seed + 1, SQ, density=0.6)
+    holds = tiles(seed + 2, cfg.gating.n_diss_partition, density=0.9) \
+        if cfg.gating else None
+    return acks, votes, holds
+
+
+def tree_eq(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    return ta == tb and all(bool(jnp.array_equal(x, y))
+                            for x, y in zip(la, lb))
+
+
+def copy_tree(t):
+    return jax.tree.map(jnp.copy, t)
+
+
+def assert_deleted(tree, what):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert leaf.is_deleted(), f"{what}: donated input not consumed"
+
+
+def _family_run(cfg, st, acks, votes, holds, *, donated):
+    """The exact donating family call ``api.run`` dispatches to, or the
+    same function un-jitted (→ undonated, eager) via ``__wrapped__``."""
+    kw = dict(diss_majority=cfg.diss_majority,
+              seq_majority=cfg.seq_majority,
+              order_budget=cfg.order_budget, max_entries=cfg.max_entries)
+    fam = cfg.family
+    if fam == "plain":
+        fn, args = S.run_sharded_ticks_merged, (
+            st.core, st.merge, acks, votes, st.slot_ids)
+    elif fam == "gated":
+        fn, args = S.run_gated_ticks_merged, (
+            st.core, st.dissem, st.merge, acks, holds, votes,
+            st.slot_ids)
+        kw["stab_majority"] = cfg.gating.stab_majority
+    elif fam == "recycled":
+        fn, args = S.run_recycled_ticks_merged, (
+            st.core, st.merge, acks, votes)
+        kw.update(watermark=cfg.recycling.watermark,
+                  id_stride=cfg.recycling.id_stride)
+    else:
+        fn, args = S.run_gated_recycled_ticks_merged, (
+            st.core, st.merge, acks, holds, votes)
+        kw.update(stab_majority=cfg.gating.stab_majority,
+                  fresh_stable=cfg.gating.fresh_stable,
+                  watermark=cfg.recycling.watermark,
+                  id_stride=cfg.recycling.id_stride)
+    return (fn if donated else fn.__wrapped__)(*args, **kw)
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILY_KW))
+def test_run_ticks_merged_donation_safe(fam):
+    cfg = _cfg(fam)
+    acks, votes, holds = traffic_for(cfg)
+    st_d = api.create_state(cfg)
+    st_u = copy_tree(st_d)
+    ref = _family_run(cfg, st_u, acks, votes, holds, donated=False)
+    got = _family_run(cfg, st_d, acks, votes, holds, donated=True)
+    assert tree_eq(ref, got)
+    assert_deleted((st_d.core, st_d.merge), fam)
+    if fam == "gated":
+        assert_deleted(st_d.dissem, fam)
+    # NOT donated: traffic (replayed by feeders) and, for the slot-id
+    # families, the slot map
+    assert not acks.is_deleted() and not votes.is_deleted()
+    if st_d.slot_ids is not None:
+        assert not st_d.slot_ids.is_deleted()
+
+
+def test_adaptive_pass_donation_safe():
+    cfg = _cfg("recycled",
+               adaptive=AD.AdaptiveConfig(max_tiles_per_tick=3,
+                                          policy="backlog"))
+    acks, votes, _ = traffic_for(cfg, seed=5)
+    st_d = api.create_state(cfg)
+    q_d = AD.queue_from_arrays(cfg, acks, votes,
+                               lengths=jnp.asarray([T, 2], jnp.int32))
+    st_u, q_u = copy_tree((st_d, q_d))
+    st_ref, q_ref, out_ref = AD.adaptive_pass(cfg, st_u, q_u)
+    st_got, q_got, out_got = AD.adaptive_pass_jit(cfg, st_d, q_d)
+    assert tree_eq((st_ref, q_ref), (st_got, q_got))
+    assert tree_eq(out_ref, out_got)
+    assert_deleted((st_d, q_d), "adaptive_pass")
+    # the returned trees must be fully materialized, fresh buffers
+    st2, q2, _ = AD.adaptive_pass_jit(cfg, st_got, q_got)
+    assert not jax.tree_util.tree_leaves(st2)[0].is_deleted()
+
+
+def test_pipeline_tick_donation_safe():
+    eng = _cfg("gated_recycled",
+               adaptive=AD.AdaptiveConfig(max_tiles_per_tick=2,
+                                          policy="undecided"))
+    pcfg = PL.PipelineConfig(engine=eng, n_clients=8, budget_bytes=256,
+                             max_requests=4, ack_lag=(1,) * D,
+                             hold_lag=(1,) * eng.gating.n_diss_partition,
+                             vote_lag=(2,) * SQ)
+    wl = WorkloadModel(n_clients=8, arrival_rate=0.7,
+                       size_choices=(64, 128)).draw(
+        jax.random.PRNGKey(0), 4)
+    rt = jnp.asarray(PL.build_route_table(pcfg, epoch=0))
+    st_d = PL.init_pipeline(pcfg)
+    st_u = copy_tree(st_d)
+    for t in range(4):
+        st_u, out_u = PL.pipeline_tick(pcfg, st_u, wl.arrived[t],
+                                       wl.sizes[t], rt)
+        st_prev = st_d
+        st_d, out_d = PL.pipeline_tick_jit(pcfg, st_d, wl.arrived[t],
+                                           wl.sizes[t], rt)
+        assert_deleted(st_prev, f"pipeline_tick t={t}")
+        assert tree_eq(out_u, out_d), t
+    assert tree_eq(st_u, st_d)
+    assert not rt.is_deleted() and not wl.arrived.is_deleted()
+
+
+def test_run_pipeline_donation_safe():
+    eng = _cfg("gated")
+    pcfg = PL.PipelineConfig(engine=eng, n_clients=8, budget_bytes=256,
+                             max_requests=4, ack_lag=(1,) * D,
+                             hold_lag=(1,) * eng.gating.n_diss_partition,
+                             vote_lag=(2,) * SQ, capacity=W)
+    wl = WorkloadModel(n_clients=8, arrival_rate=0.8,
+                       size_choices=(64,)).draw(jax.random.PRNGKey(1), 4)
+    rt = jnp.asarray(PL.build_route_table(pcfg, epoch=0))
+    st_d = PL.init_pipeline(pcfg)
+    st_u = copy_tree(st_d)
+    ref_st, ref_out = PL.run_pipeline.__wrapped__(
+        pcfg, st_u, wl.arrived, wl.sizes, rt)
+    got_st, got_out = PL.run_pipeline(pcfg, st_d, wl.arrived, wl.sizes,
+                                      rt)
+    assert tree_eq(ref_st, got_st) and tree_eq(ref_out, got_out)
+    assert_deleted(st_d, "run_pipeline")
+
+
+def test_meshed_run_donation_safe():
+    cfg = _cfg("gated_recycled", mesh=MeshConfig())
+    acks, votes, holds = traffic_for(cfg, seed=9)
+    st_d = api.create_state(cfg)
+    st_u = copy_tree(st_d)
+    ref = meshed.run(cfg, st_u, acks, votes, holds)
+    got = meshed.run_jit(cfg, st_d, acks, votes, holds)
+    assert tree_eq(ref, got)
+    assert_deleted(st_d, "meshed.run_jit")
